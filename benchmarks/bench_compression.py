@@ -1,0 +1,68 @@
+"""Paper Fig. 3 — weight storage reduction.
+
+Parameter and byte reduction per model under the block-circulant
+representation, including the rfft-symmetry spectral store and the 12-bit
+quantization the paper combines with it.  Run over the paper's own models
+AND the 10 assigned architectures.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import CompressionConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import circulant as cc
+from repro.models.registry import build_model
+from repro.roofline.analysis import count_params
+
+from .common import PAPER_MODELS, emit
+from repro.core.compression import summarize
+
+
+def paper_fig3_rows(block: int = 64):
+    rows = []
+    comp = CompressionConfig(enabled=True, block_ffn=block,
+                             block_attn=min(block, 16))
+    for name, costs in PAPER_MODELS.items():
+        s = summarize(costs, comp)
+        # paper stacks parameter reduction x bit quantization (32b -> 12b)
+        rows.append({
+            "model": name,
+            "dense_params": s["dense_params"],
+            "bc_params": s["bc_params"],
+            "param_reduction": round(s["param_compression"], 1),
+            "bytes_reduction_12bit": round(
+                s["param_compression"] * 32 / 12, 1),
+        })
+    return rows
+
+
+def arch_rows():
+    rows = []
+    for arch in ARCH_IDS:
+        dense_cfg = get_config(arch, compress=False)
+        bc_cfg = get_config(arch, compress=True)
+        n_dense = count_params(jax.eval_shape(
+            lambda: build_model(dense_cfg).init(jax.random.PRNGKey(0))))
+        n_bc = count_params(jax.eval_shape(
+            lambda: build_model(bc_cfg).init(jax.random.PRNGKey(0))))
+        k = bc_cfg.compression.block_ffn
+        rows.append({
+            "model": arch,
+            "dense_params": n_dense,
+            "bc_params": n_bc,
+            "param_reduction": round(n_dense / n_bc, 1),
+            "bytes_reduction_12bit": round(n_dense / n_bc * 32 / 12, 1),
+        })
+    return rows
+
+
+def main():
+    print("# bench_compression (paper Fig. 3)")
+    header = ["model", "dense_params", "bc_params", "param_reduction",
+              "bytes_reduction_12bit"]
+    emit(paper_fig3_rows() + arch_rows(), header)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper §Accelerating Computation — the FFT/IFFT decoupling technique.
+
+Counts FFTs/IFFTs and measures wall-clock for the three formulations the
+paper walks through on one FC layer (p x q blocks):
+
+  naive      : p·q FFT(x) + p·q IFFT          (no reuse)
+  reuse-x    : q FFT(x), IFFT inside Σ_j      (x-FFT reuse only)
+  decoupled  : q FFT(x), 1 IFFT per block-row (paper's final form;
+               weights FFT'd offline)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import circulant as cc
+
+from .common import emit, time_fn
+
+
+def naive(x, w, n_out):
+    p, q, k = w.shape
+    xb = cc._blockify(x, q, k).astype(jnp.float32)
+    outs = []
+    for i in range(p):
+        acc = 0
+        for j in range(q):
+            xr, xi = cc.rfft_planes(xb[..., j, :], k)       # p·q FFTs
+            wr, wi = cc.rfft_planes(w[i, j], k)
+            acc = acc + cc.irfft_planes(xr * wr - xi * wi,
+                                        xr * wi + xi * wr, k)  # p·q IFFTs
+        outs.append(acc)
+    return jnp.concatenate(outs, -1)[..., :n_out]
+
+
+def reuse_x(x, w, n_out):
+    p, q, k = w.shape
+    xb = cc._blockify(x, q, k).astype(jnp.float32)
+    xr, xi = cc.rfft_planes(xb, k)                          # q FFTs
+    wr, wi = cc.rfft_planes(w, k)
+    outs = []
+    for i in range(p):
+        y = 0
+        for j in range(q):
+            y = y + cc.irfft_planes(xr[..., j, :] * wr[i, j] -
+                                    xi[..., j, :] * wi[i, j],
+                                    xr[..., j, :] * wi[i, j] +
+                                    xi[..., j, :] * wr[i, j], k)  # p·q IFFTs
+        outs.append(y)
+    return jnp.concatenate(outs, -1)[..., :n_out]
+
+
+def main(n: int = 1024, k: int = 128, batch: int = 32):
+    print("# bench_decoupling (paper's FFT/IFFT decoupling)")
+    p = q = n // k
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), n, n, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
+    fns = {
+        "naive": (jax.jit(lambda x, w: naive(x, w, n)), p * q, p * q),
+        "reuse_x": (jax.jit(lambda x, w: reuse_x(x, w, n)), q, p * q),
+        "decoupled": (jax.jit(lambda x, w: cc.bc_matmul_fft(x, w, n)),
+                      q, p),
+    }
+    ref = None
+    rows = []
+    for name, (fn, nfft, nifft) in fns.items():
+        out = fn(x, w)
+        if ref is None:
+            ref = out
+        else:
+            assert float(jnp.abs(out - ref).max()) < 1e-2, name
+        rows.append({"form": name, "ffts_per_call": nfft,
+                     "iffts_per_call": nifft,
+                     "us_per_call": round(time_fn(fn, x, w, iters=10), 1)})
+    emit(rows, ["form", "ffts_per_call", "iffts_per_call", "us_per_call"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 1 — throughput of the paper's own small models, dense vs
+block-circulant, batched inference (the paper's batch-processing mode).
+
+Wall-clock is CPU here (the FPGA/TPU numbers are derived analytically in
+bench_equiv_ops) — what this table demonstrates is the paper's central
+claim shape: the block-circulant pipeline is faster than dense *at equal
+model function*, and the gap grows with layer size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import circulant as cc
+
+from .common import emit, time_fn
+
+
+def mlp_pair(key, dims, k):
+    """Dense and circulant params for an MLP with the given dims."""
+    ks = jax.random.split(key, len(dims))
+    dense, circ = [], []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        dense.append(jax.random.normal(ks[i], (a, b)) / jnp.sqrt(a))
+        circ.append(cc.init_block_circulant(ks[i], a, b, min(k, a, b)))
+    return dense, circ
+
+
+def run_mlp(ws, x, circ: bool, dims):
+    h = x
+    for i, w in enumerate(ws):
+        if circ:
+            h = cc.bc_matmul_fft(h, w, dims[i + 1])
+        else:
+            h = h @ w
+        if i < len(ws) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+MODELS = {
+    "mnist_mlp1": ([256, 256, 128, 10], 64),
+    "mnist_mlp2": ([128, 128, 128, 10], 64),
+    "fc1024": ([1024, 1024, 1024, 10], 128),
+    "fc4096": ([4096, 4096, 4096, 10], 128),
+}
+
+
+def main(batch: int = 64):
+    print("# bench_throughput (paper Table 1, CPU wall-clock)")
+    rows = []
+    for name, (dims, k) in MODELS.items():
+        dense, circ = mlp_pair(jax.random.PRNGKey(0), dims, k)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, dims[0]))
+        f_d = jax.jit(lambda ws, x: run_mlp(ws, x, False, dims))
+        f_c = jax.jit(lambda ws, x: run_mlp(ws, x, True, dims))
+        t_d = time_fn(f_d, dense, x)
+        t_c = time_fn(f_c, circ, x)
+        n_d = sum(w.size for w in dense)
+        n_c = sum(w.size for w in circ)
+        rows.append({
+            "model": name, "batch": batch,
+            "dense_us": round(t_d, 1), "circulant_us": round(t_c, 1),
+            "speedup": round(t_d / t_c, 2),
+            "param_reduction": round(n_d / n_c, 1),
+            "kfps_dense": round(batch / t_d * 1e3, 1),
+            "kfps_circulant": round(batch / t_c * 1e3, 1),
+        })
+    emit(rows, ["model", "batch", "dense_us", "circulant_us", "speedup",
+                "param_reduction", "kfps_dense", "kfps_circulant"])
+
+
+if __name__ == "__main__":
+    main()

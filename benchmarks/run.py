@@ -1,0 +1,33 @@
+"""Run every benchmark (one per paper table/figure).  CSV to stdout.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run compression throughput
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (bench_accuracy_tradeoff, bench_complexity, bench_compression,
+               bench_decoupling, bench_equiv_ops, bench_throughput)
+
+ALL = {
+    "compression": bench_compression.main,        # paper Fig. 3
+    "throughput": bench_throughput.main,          # paper Table 1
+    "equiv_ops": bench_equiv_ops.main,            # paper Fig. 6
+    "complexity": bench_complexity.main,          # O(n log n) claim
+    "decoupling": bench_decoupling.main,          # FFT/IFFT decoupling
+    "accuracy_tradeoff": bench_accuracy_tradeoff.main,  # k-vs-quality
+}
+
+
+def main():
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        t0 = time.time()
+        ALL[name]()
+        print(f"[{name}: {time.time() - t0:.1f}s]\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

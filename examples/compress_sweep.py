@@ -1,0 +1,10 @@
+"""The paper's co-optimization loop in miniature: sweep the block size k,
+train each model, and print the accuracy/compression frontier (paper Fig. 5
+loop: "model selection and optimization" against an accuracy requirement).
+
+  PYTHONPATH=src python examples/compress_sweep.py
+"""
+from benchmarks.bench_accuracy_tradeoff import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end serving driver (the paper's deployment mode: batched
+inference on a compressed model): batched requests through the engine's
+prefill + ring/linear-KV decode, with cached spectral weights.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = get_smoke_config("mixtral-8x7b")          # MoE + SWA family
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_batch=4, max_seq=128)
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size,
+                                       size=rng.randint(4, 24)).astype(np.int32),
+                    max_new_tokens=12, id=i) for i in range(10)]
+    t0 = time.time()
+    results = engine.generate(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r["tokens"]) for r in results)
+    for r in results[:4]:
+        print(f"req {r['id']}: {r['tokens']}")
+    print(f"... {len(results)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s on 1 CPU core)")
+
+
+if __name__ == "__main__":
+    main()

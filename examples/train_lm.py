@@ -1,0 +1,46 @@
+"""End-to-end training driver: a ~10M-param block-circulant LM trained for a
+few hundred steps on the deterministic synthetic pipeline, with checkpoints,
+resume, NaN guard, and the paper's compression on every projection.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--dense]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import (ArchConfig, AttentionConfig,
+                                CompressionConfig)
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--bayesian", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    comp = (CompressionConfig(enabled=False) if args.dense else
+            CompressionConfig(enabled=True, block_ffn=32, block_attn=32))
+    cfg = ArchConfig(
+        name="lm-10m", num_layers=4, d_model=256, d_ff=1024, vocab_size=4096,
+        attention=AttentionConfig(num_heads=8, num_kv_heads=4, head_dim=32),
+        compression=comp, remat="none")
+
+    data = SyntheticLM(cfg, batch=16, seq=128, seed=0)
+    trainer = Trainer(
+        cfg, adamw.AdamWConfig(lr=1e-3, quantize_moments=False),
+        workdir=args.workdir, data_fn=data, total_steps=args.steps,
+        ckpt_every=100, log_every=10, bayesian_mode=args.bayesian)
+    state = trainer.run()
+    n = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"done: {int(state['step'])} steps, {n:,} params, "
+          f"final loss {trainer.history[-1]['loss']:.4f}, "
+          f"skipped {int(state['skipped'])} bad steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+# The paper's primary contribution: block-circulant weight representation
+# with FFT-domain computation, as a first-class composable feature.
+from . import bayesian, circulant, compression, conv, theory  # noqa: F401
+from .circulant import (  # noqa: F401
+    LinearSpec, apply_linear, bc_matmul_direct, bc_matmul_fft,
+    bc_matmul_spectral, init_block_circulant, init_linear, materialize_dense,
+    spectral_cache,
+)

@@ -1,0 +1,69 @@
+"""Variational-inference Bayesian training (paper §Algorithm-Hardware
+Co-Optimizations, third leg).
+
+Mean-field Gaussian posterior over every weight: q(w) = N(mu, softplus(rho)²).
+Training samples w = mu + sigma*eps per step (reparameterization) and
+minimizes  E_q[NLL] + KL(q || N(0, prior_sigma²)) / num_examples.
+Inference uses the posterior mean (exactly what the paper deploys in
+hardware: "using the average estimate of each weight").
+
+Works on *any* param pytree — dense or block-circulant first-row params —
+because the circulant structure is preserved under elementwise perturbation
+of the first-row generators.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_bayesian(params: Any, init_rho: float = -5.0) -> Any:
+    """Wrap a deterministic param tree into {mu, rho} leaves."""
+    return jax.tree.map(lambda p: {"mu": p, "rho": jnp.full_like(p, init_rho)},
+                        params, is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def _sigma(rho):
+    return jax.nn.softplus(rho)
+
+
+def sample(key, bparams: Any) -> Any:
+    """Draw one weight realization via reparameterization."""
+    leaves, treedef = jax.tree.flatten(
+        bparams, is_leaf=lambda x: isinstance(x, dict) and "mu" in x)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        eps = jax.random.normal(k, leaf["mu"].shape, leaf["mu"].dtype)
+        out.append(leaf["mu"] + _sigma(leaf["rho"]) * eps)
+    return jax.tree.unflatten(treedef, out)
+
+
+def posterior_mean(bparams: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        bparams, is_leaf=lambda x: isinstance(x, dict) and "mu" in x)
+    return jax.tree.unflatten(treedef, [l["mu"] for l in leaves])
+
+
+def kl_to_prior(bparams: Any, prior_sigma: float = 1.0) -> jax.Array:
+    """Sum of KL(N(mu,s²) || N(0,p²)) over all weights (closed form)."""
+    leaves, _ = jax.tree.flatten(
+        bparams, is_leaf=lambda x: isinstance(x, dict) and "mu" in x)
+    total = jnp.zeros(())
+    for l in leaves:
+        s = _sigma(l["rho"])
+        kl = (jnp.log(prior_sigma / s) +
+              (s ** 2 + l["mu"] ** 2) / (2 * prior_sigma ** 2) - 0.5)
+        total = total + kl.sum()
+    return total
+
+
+def elbo_loss(key, bparams, nll_fn, num_examples: int,
+              prior_sigma: float = 1.0) -> Tuple[jax.Array, Any]:
+    """ELBO = E_q[NLL] + KL/num_examples; returns (loss, sampled params)."""
+    w = sample(key, bparams)
+    nll = nll_fn(w)
+    return nll + kl_to_prior(bparams, prior_sigma) / num_examples, w

@@ -1,0 +1,51 @@
+"""Block-circulant CONV layers (paper §Inference and Training for CONV Layers).
+
+The paper generalizes block-circulant structure to the rank-4 CONV weight
+tensor F(r, r, C, P): if every slice F(·,·,c,p) is block-circulant, then the
+im2col-reshaped matrix F ∈ R^{Cr²×P} is block-circulant, and Y = X·F runs
+through the same FFT pipeline as an FC layer.
+
+We implement exactly that: extract patches (im2col) with XLA's native patch
+op, then dispatch to the block-circulant linear.  Used by the paper-table
+benchmark CNNs (LeNet-like MNIST CNN, CIFAR CNN) and the correctness tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import circulant as cc
+
+
+def im2col(x: jax.Array, r: int, stride: int = 1, padding: str = "VALID"):
+    """x: (B, H, W, C) -> patches (B, Ho, Wo, r*r*C)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(r, r), window_strides=(stride, stride),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major (C*r*r) features;
+    # reorder to (r*r*C) so the circulant block structure matches F(Cr², P).
+    B, Ho, Wo, _ = patches.shape
+    C = x.shape[-1]
+    patches = patches.reshape(B, Ho, Wo, C, r * r).swapaxes(-1, -2)
+    return patches.reshape(B, Ho, Wo, r * r * C)
+
+
+def init_conv_circulant(key, r: int, c_in: int, c_out: int, k: int,
+                        dtype=jnp.float32):
+    """First-row params for the im2col'd (r²·C_in × C_out) weight."""
+    return cc.init_block_circulant(key, r * r * c_in, c_out, k, dtype)
+
+
+def conv2d_block_circulant(x, w, r: int, c_out: int, stride: int = 1,
+                           padding: str = "VALID", path: str = "fft"):
+    """Block-circulant 2-D convolution via im2col. x: (B,H,W,C) -> (B,Ho,Wo,P)."""
+    cols = im2col(x, r, stride, padding)                   # (B,Ho,Wo,r²C)
+    fn = {"fft": cc.bc_matmul_fft, "direct": cc.bc_matmul_direct}[path]
+    return fn(cols, w, c_out)
+
+
+def conv2d_dense(x, f, stride: int = 1, padding: str = "VALID"):
+    """Reference dense conv. f: (r, r, C_in, C_out)."""
+    return jax.lax.conv_general_dilated(
+        x, f, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,50 @@
+"""jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+
+Kernel dispatch policy (``REPRO_KERNELS`` env var or explicit argument):
+  'interpret' — run the Pallas kernel bodies in interpret mode (CPU-correct;
+                what tests use to validate the TPU kernels).
+  'tpu'       — compiled Pallas (real TPU target).
+  'off'       — pure-XLA lowering (what the 512-device dry-run uses: the
+                einsum/chunked-scan forms lower to the same collectives and
+                FLOPs the roofline needs, without paying interpret-mode cost).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import ref as _ref
+from . import spectral_matmul as _sm
+
+
+def kernel_mode() -> str:
+    return os.environ.get("REPRO_KERNELS", "off")
+
+
+# ---------------------------------------------------------------------------
+def spectral_matmul(xr, xi, wr, ws1, ws2, mode: str | None = None):
+    """(F,B,Q) x (F,Q,P) complex contraction via real planes + Gauss trick."""
+    mode = mode or kernel_mode()
+    if mode == "off":
+        wi = ws1 + wr           # recover plain planes for the einsum fallback
+        return _ref.spectral_matmul_ref(xr, xi, wr, wi)
+    return _sm.spectral_matmul(xr, xi, wr, ws1, ws2,
+                               interpret=(mode == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, kv_offset=0, mode: str | None = None,
+                    **block_kw):
+    mode = mode or kernel_mode()
+    if mode == "off":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  kv_offset=kv_offset)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               kv_offset=kv_offset,
+                               interpret=(mode == "interpret"), **block_kw)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests assert_allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Spectral block matmul oracle:  Y[f,b,p] = sum_q X[f,b,q] * W[f,q,p]  (complex)
+# ---------------------------------------------------------------------------
+def spectral_matmul_ref(xr, xi, wr, wi):
+    """Inputs laid out (F, B, Q) and (F, Q, P); complex contraction over Q."""
+    yr = jnp.einsum("fbq,fqp->fbp", xr, wr) - jnp.einsum("fbq,fqp->fbp", xi, wi)
+    yi = jnp.einsum("fbq,fqp->fbp", xr, wi) + jnp.einsum("fbq,fqp->fbp", xi, wr)
+    return yr, yi
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle: full-materialization softmax attention with all the mask
+# variants the models need (causal, sliding window, softcap, GQA).
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                  scale=None, kv_offset=0):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).  kv_offset: absolute position
+    of q[0] minus position of k[0] (for decode: Skv - Sq)."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(Sq)[:, None] + kv_offset
+    cols = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+    return out.astype(q.dtype)

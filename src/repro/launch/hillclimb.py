@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Perf hillclimb driver: lower one cell under a named variant, report the
+roofline terms.  Each §Perf iteration is one invocation; EXPERIMENTS.md
+records hypothesis -> change -> before -> after.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch tinyllama-1.1b --shape train_4k --variant fuse --out results/hc.json
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+
+from ..configs.base import SHAPES_BY_NAME  # noqa: E402
+from ..configs.registry import get_config  # noqa: E402
+from . import dryrun, mesh as mesh_lib  # noqa: E402
+
+VARIANTS = {
+    # paper-faithful baseline (same knobs the roofline sweep uses)
+    "baseline": dict(),
+    # paper-faithful WITHOUT the Gauss 3-mult trick (the pure-paper MAC count)
+    "nogauss": dict(comp=dict(gauss_trick=False)),
+    # beyond-paper: fused q/k/v + gate/up DFT pipelines
+    "fuse": dict(comp=dict(fuse_projections=True)),
+    # beyond-paper: no remat (flops down ~25%, memory up)
+    "noremat": dict(cfg=dict(remat="none")),
+    "fuse_noremat": dict(comp=dict(fuse_projections=True),
+                         cfg=dict(remat="none")),
+    # beyond-paper: token-parallel layout (weights replicated over "model",
+    # sequence sharded over it) — kills TP collectives on compressed layers
+    "tokenpar": dict(strategy="tokenpar"),
+    "fuse_tokenpar": dict(comp=dict(fuse_projections=True),
+                          strategy="tokenpar"),
+    # block-size sensitivity (transform cost ∝ n·k, MAC ∝ n²/k)
+    "k64": dict(comp=dict(block_ffn=64, block_attn=64, block_expert=64)),
+    "k256": dict(comp=dict(block_ffn=256, block_attn=256, block_expert=256)),
+    # decode: f8 KV cache (halves the cache-read memory term)
+    "kvf8": dict(cfg=dict(kv_cache_dtype="float8_e4m3fn")),
+    "kvf8_fuse": dict(cfg=dict(kv_cache_dtype="float8_e4m3fn"),
+                      comp=dict(fuse_projections=True)),
+    # combined best-of for train cells
+    "best": dict(comp=dict(fuse_projections=True), cfg=dict(remat="none"),
+                 strategy="tokenpar"),
+    "kvf8_tokenpar": dict(cfg=dict(kv_cache_dtype="float8_e4m3fn"),
+                          strategy="tokenpar"),
+    # dense reference (the paper's uncompressed baseline)
+    "dense": dict(compress=False),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, accum: int = 0):
+    spec = VARIANTS[variant]
+    cfg = get_config(arch, compress=spec.get("compress", True))
+    if "comp" in spec:
+        cfg = cfg.replace(compression=dataclasses.replace(
+            cfg.compression, **spec["comp"]))
+    if "cfg" in spec:
+        cfg = cfg.replace(**spec["cfg"])
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    strategy = spec.get("strategy", "megatron")
+    # roofline lowering knobs (accum=0 -> exact-cost unrolled)
+    if accum == 0:
+        S = SHAPES_BY_NAME[shape].seq_len
+        cfg = cfg.replace(unroll_scan=True, attn_q_chunk=max(S // 4, 1),
+                          attn_kv_chunk=max(S, 1), mlstm_chunk=max(S, 1))
+        accum = 1
+    rec = {"arch": arch, "shape": shape, "variant": variant,
+           "strategy": strategy}
+    import time
+    import traceback
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = dryrun.lower_cell(
+            arch, shape, mesh, strategy,
+            compress=spec.get("compress", True), accum=accum,
+            cfg_override=cfg)
+        from ..roofline import analysis as roofline
+        rec.update(roofline.cell_report(lowered, compiled, meta["cfg"],
+                                        meta["shape"], mesh))
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-1500:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True,
+                    help=f"comma list of {sorted(VARIANTS)}")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    recs = []
+    existing = (json.load(open(args.out))
+                if args.out and os.path.exists(args.out) else [])
+    for v in args.variant.split(","):
+        rec = run_variant(args.arch, args.shape, v)
+        recs.append(rec)
+        if args.out:                          # incremental: survive kills
+            with open(args.out, "w") as f:
+                json.dump(existing + recs, f, indent=1)
+        if rec["status"] == "ok":
+            print(f"{v}: compute={rec['compute_s']*1e3:.1f}ms "
+                  f"memory={rec['memory_s']*1e3:.1f}ms "
+                  f"collective={rec['collective_s']*1e3:.1f}ms "
+                  f"dom={rec['dominant']} mhr={rec['model_hlo_ratio']:.3f} "
+                  f"roof={rec['roofline_frac_overlap']:.3f} "
+                  f"({rec['wall_s']}s)", flush=True)
+        else:
+            print(f"{v}: FAIL {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Host-scale (this container) runs the REDUCED same-family config by default;
+``--full`` selects the published config (for multi-host TPU launches — the
+same entrypoint, the mesh comes from the environment).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
+from ..data.pipeline import SyntheticLM
+from ..optim import adamw
+from ..train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--full", action="store_true",
+                    help="published config (TPU-scale launch)")
+    ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--bayesian", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--int8-moments", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+
+    getter = get_config if args.full else get_smoke_config
+    cfg = getter(args.arch, compress=not args.no_compress)
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq, seed=0)
+    trainer = Trainer(
+        cfg,
+        adamw.AdamWConfig(lr=args.lr, quantize_moments=args.int8_moments),
+        workdir=args.workdir, data_fn=data, total_steps=args.steps,
+        ckpt_every=max(args.steps // 2, 1), log_every=10, accum=args.accum,
+        compress_grads=args.compress_grads, bayesian_mode=args.bayesian)
+    state = trainer.run()
+    n = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"[launch.train] {args.arch}: {int(state['step'])} steps, "
+          f"{n:,} params, loss {trainer.history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Token embeddings, LM head, and rotary position embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * (dim ** -0.5)}
+
+
+def embed(params, tokens, scale_by_dim: bool = False):
+    t = params["table"][tokens]
+    if scale_by_dim:                       # gemma-style sqrt(d) input scaling
+        t = t * (params["table"].shape[-1] ** 0.5)
+    return t
+
+
+def logits(params, x, softcap: float = 0.0):
+    """Tied LM head: x @ table.T (+ optional gemma2 final softcap)."""
+    out = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    if softcap:
+        out = softcap * jnp.tanh(out / softcap)
+    return out
+
+
+def init_learned_pos(key, max_pos: int, dim: int, dtype=jnp.float32):
+    return {"pos": jax.random.normal(key, (max_pos, dim), dtype) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,155 @@
+"""Feed-forward layers: gated MLPs and mixture-of-experts.
+
+MoE uses grouped token-choice top-k routing with a capacity factor: tokens are
+routed within fixed-size groups so the one-hot dispatch tensors stay small
+(t·E·c per group instead of T·E·C globally), which is what makes the
+dispatch/combine einsums slice cleanly under data parallelism and the expert
+weights shard over the model axis (expert parallelism).
+
+Expert FFN weights are `(E, ...)`-stacked and — when the paper's compression
+is on — per-expert block-circulant ((E, p, q, k) first rows).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..core.circulant import (LinearSpec, apply_linear, bc_matmul_fft,
+                              init_block_circulant, init_linear)
+
+
+def _act(name: str, x):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name](x)
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, comp=None, gated: bool = True):
+    spec = LinearSpec.from_config(comp, "ffn")
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], d_model, d_ff, spec),
+         "down": init_linear(ks[1], d_ff, d_model, spec)}
+    if gated:
+        p["gate"] = init_linear(ks[2], d_model, d_ff, spec)
+    return p
+
+
+def mlp(params, x, *, d_ff: int, comp=None, activation="silu", mode="train"):
+    spec = LinearSpec.from_config(comp, "ffn")
+    fuse = (comp is not None and getattr(comp, "fuse_projections", False)
+            and spec.kind == "block_circulant" and "gate" in params)
+    if fuse:
+        from ..core.circulant import bc_matmul_fused
+        up, gate = bc_matmul_fused(
+            x, [params["up"]["wc"], params["gate"]["wc"]], [d_ff, d_ff], mode)
+        up = _act(activation, gate) * up
+    else:
+        up = apply_linear(params["up"], x, spec, d_ff, mode)
+        if "gate" in params:
+            up = _act(activation,
+                      apply_linear(params["gate"], x, spec, d_ff, mode)) * up
+        else:
+            up = _act(activation, up)
+    return apply_linear(params["down"], up, spec, x.shape[-1], mode)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts
+# ---------------------------------------------------------------------------
+def init_moe(key, d_model: int, d_ff: int, moe_cfg, comp=None):
+    E = moe_cfg.num_experts
+    ks = jax.random.split(key, 5)
+    k = comp.block_for("expert") if comp is not None and comp.enabled else 0
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_ff = 1.0 / math.sqrt(d_ff)
+    if k:
+        def bc(key_, n_in, n_out):
+            keys = jax.random.split(key_, E)
+            return jnp.stack([init_block_circulant(kk, n_in, n_out, k)
+                              for kk in keys])
+        experts = {"up": bc(ks[0], d_model, d_ff),
+                   "gate": bc(ks[1], d_model, d_ff),
+                   "down": bc(ks[2], d_ff, d_model)}
+    else:
+        experts = {
+            "up": jax.random.normal(ks[0], (E, d_model, d_ff)) * scale_in,
+            "gate": jax.random.normal(ks[1], (E, d_model, d_ff)) * scale_in,
+            "down": jax.random.normal(ks[2], (E, d_ff, d_model)) * scale_ff,
+        }
+    p = {"router": jax.random.normal(ks[3], (d_model, E)) * scale_in,
+         "experts": experts}
+    if moe_cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff, comp)
+    return p
+
+
+def _expert_ffn(experts: Dict, xe, activation: str, d_ff: int, d_model: int,
+                bc_block: int):
+    """xe: (E, cap, d_model) -> (E, cap, d_model), per-expert weights."""
+    if bc_block:
+        fwd = jax.vmap(lambda w, x: bc_matmul_fft(x, w, d_ff))
+        up = fwd(experts["up"], xe)
+        gate = fwd(experts["gate"], xe)
+        h = _act(activation, gate) * up
+        return jax.vmap(lambda w, x: bc_matmul_fft(x, w, d_model))(
+            experts["down"], h)
+    up = jnp.einsum("ecd,edf->ecf", xe, experts["up"].astype(xe.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", xe, experts["gate"].astype(xe.dtype))
+    h = _act(activation, gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, experts["down"].astype(xe.dtype))
+
+
+def moe(params, x, *, d_ff: int, moe_cfg, comp=None, activation="silu",
+        mode="train"):
+    """Grouped top-k token-choice MoE.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, topk = moe_cfg.num_experts, moe_cfg.top_k
+    T = B * S
+    g = math.gcd(min(moe_cfg.router_group_size, T), T)  # largest divisor <= cfg
+    G = T // g
+    cap = max(1, int(math.ceil(g * topk / E * moe_cfg.capacity_factor)))
+    cap = min(cap, g)
+    if mode == "serve" and S == 1:
+        cap = g          # decode is DROPLESS: worst case all tokens one expert
+    bc_block = comp.block_for("expert") if comp is not None else 0
+
+    xt = x.reshape(G, g, d)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)          # (G, g, topk)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)     # (G,g,topk,E)
+    flat = onehot.reshape(G, g * topk, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                # (G, g*topk, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(G, g, topk)
+    within_cap = pos < cap
+    disp = (jax.nn.one_hot(gate_idx, E, dtype=x.dtype)[..., :, None] *
+            jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :])  # (G,g,topk,E,cap)
+    disp = disp * within_cap[..., None, None].astype(x.dtype)
+    comb = disp * gate_vals[..., None, None].astype(x.dtype)
+    disp_t = disp.sum(2)                                      # (G,g,E,cap)
+    comb_t = comb.sum(2)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp_t)             # (G,E,cap,d)
+    xe = xe.transpose(1, 0, 2, 3).reshape(E, G * cap, d)
+    ye = _expert_ffn(params["experts"], xe, activation, d_ff, d, bc_block)
+    ye = ye.reshape(E, G, cap, d).transpose(1, 0, 2, 3)       # (G,E,cap,d)
+    out = jnp.einsum("gecd,gtec->gtd", ye, comb_t)
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], xt, d_ff=d_ff, comp=comp,
+                        activation=activation, mode=mode)
+
+    # load-balancing auxiliary loss (Switch-style), returned via aux dict
+    density = flat.astype(jnp.float32).mean(1)                # (G, E)
+    router_prob = probs.mean(1)                               # (G, E)
+    aux = (density * router_prob).sum(-1).mean() * E
+    return out.reshape(B, S, d), aux

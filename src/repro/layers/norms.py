@@ -1,0 +1,36 @@
+"""Normalization layers (f32 statistics regardless of activation dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int):
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * (1.0 + params["scale"])).astype(x.dtype)
+
+
+def init_layernorm(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def init_norm(kind: str, dim: int):
+    return init_rmsnorm(dim) if kind == "rmsnorm" else init_layernorm(dim)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)

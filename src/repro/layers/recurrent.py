@@ -1,0 +1,319 @@
+"""Recurrent sequence-mixing cells: RG-LRU (RecurrentGemma/Griffin) and
+xLSTM's mLSTM / sLSTM.
+
+All cells expose both a *sequence* form (train/prefill: parallel associative
+scan or chunkwise recurrence — sub-quadratic, which is why these archs run the
+long_500k shape) and a *step* form (decode: O(1) state update).
+
+The cells' in/out projections route through `apply_linear`, so the paper's
+block-circulant compression applies; the recurrences themselves are diagonal/
+elementwise and have no weight matrix to compress (see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.circulant import LinearSpec, apply_linear, init_linear
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin): h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)
+# ---------------------------------------------------------------------------
+_C = 8.0   # Griffin's fixed recurrence sharpness constant
+
+
+def init_rglru(key, d_model: int, width: int, comp=None, conv_width: int = 4):
+    spec = LinearSpec.from_config(comp, "ffn")
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": init_linear(ks[0], d_model, width, spec),
+        "in_gate": init_linear(ks[1], d_model, width, spec),
+        "out": init_linear(ks[2], width, d_model, spec),
+        "conv_w": jax.random.normal(ks[3], (conv_width, width)) * 0.1,
+        "conv_b": jnp.zeros((width,)),
+        # per-channel recurrence parameter Λ, init so a ~ U(0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(  # inverse softplus
+            -jnp.log(jnp.linspace(0.9, 0.999, width)) / _C)),
+        "gate_r": init_linear(ks[4], width, width, spec),
+        "gate_i": init_linear(ks[5], width, width, spec),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,W); w: (cw, W). state: (B, cw-1, W)."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def rglru_scan(log_a, gated_x):
+    """Parallel linear recurrence via associative scan over (a, b) pairs."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, a2.astype(b1.dtype) * b1 + b2  # log-space decay product
+    # work with log(a) for stability; b in linear space
+    la, b = jax.lax.associative_scan(
+        lambda e1, e2: (e1[0] + e2[0], jnp.exp(e2[0]) * e1[1] + e2[1]),
+        (log_a, gated_x), axis=1)
+    return b
+
+
+def rglru_block(params, x, *, width: int, comp=None, mode="train",
+                state=None) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d_model). state: {"h": (B,W), "conv": (B,cw-1,W)} or None."""
+    spec = LinearSpec.from_config(comp, "ffn")
+    B, S, _ = x.shape
+    xb = apply_linear(params["in_x"], x, spec, width, mode)
+    gate_branch = apply_linear(params["in_gate"], x, spec, width, mode)
+    gate_branch = jax.nn.gelu(gate_branch)
+
+    xb, conv_state = _causal_conv1d(
+        xb, params["conv_w"], params["conv_b"],
+        None if state is None else state["conv"])
+
+    r = jax.nn.sigmoid(apply_linear(params["gate_r"], xb, spec, width, mode)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(params["gate_i"], xb, spec, width, mode)
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # (B,S,W) f32
+    gated = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-9)) * (
+        i * xb.astype(jnp.float32))
+
+    if state is not None and "h" in state:
+        # fold previous state into the first step: b_0 += a_0 * h_prev
+        h_prev = state["h"].astype(jnp.float32)
+        first = gated[:, 0] + jnp.exp(log_a[:, 0]) * h_prev
+        gated = gated.at[:, 0].set(first)
+    h = rglru_scan(log_a, gated)                              # (B,S,W)
+
+    out = h.astype(x.dtype) * gate_branch
+    out = apply_linear(params["out"], out, spec, x.shape[-1], mode)
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    return out, new_state
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int = 4):
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, width), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T, chunkwise.
+# ---------------------------------------------------------------------------
+def init_mlstm(key, d_model: int, heads: int, proj_factor: float = 2.0,
+               comp=None):
+    spec = LinearSpec.from_config(comp, "ffn")
+    d_in = int(d_model * proj_factor)
+    dh = d_in // heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_linear(ks[0], d_model, d_in, spec),
+        "up_gate": init_linear(ks[1], d_model, d_in, spec),
+        "q": init_linear(ks[2], d_in, d_in, spec),
+        "k": init_linear(ks[3], d_in, d_in, spec),
+        "v": init_linear(ks[4], d_in, d_in, spec),
+        "ifg": jax.random.normal(ks[5], (d_in, 2 * heads)) * (d_in ** -0.5),
+        "ifg_b": jnp.concatenate([jnp.zeros((heads,)),
+                                  jnp.linspace(3.0, 6.0, heads)]),
+        "out": init_linear(ks[6], d_in, d_model, spec),
+        "onorm_scale": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _mlstm_seq(q, k, v, i_pre, f_pre, state=None, chunk: int = 256):
+    """Stabilized chunkwise mLSTM.  q/k/v: (B,H,S,dh); gates (B,H,S) pre-act.
+
+    Within a chunk, outputs use the quadratic masked form; across chunks a
+    scan carries (C, n, m).  Equivalent to the step recurrence (tested).
+    """
+    B, H, S, dh = q.shape
+    c = min(chunk, S)
+    nc = S // c
+    assert nc * c == S
+    logf = jax.nn.log_sigmoid(f_pre)                   # (B,H,S)
+    logi = i_pre
+
+    qs = q.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    ks_ = k.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    lfs = logf.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+    lis = logi.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    scale = dh ** -0.5
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, lf, li = xs
+        qc = qc.astype(jnp.float32) * scale
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=-1)                    # (B,H,c) cumulative logf
+        # decay of initial state to position t: exp(F_t); gate of source s->t:
+        # exp(F_t - F_s + li_s) for s<=t
+        dmat = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        m_intra = dmat.max(-1)                         # (B,H,c)
+        m_inter = F + m[..., None]                     # init-state log decay
+        m_new = jnp.maximum(m_intra, m_inter)          # (B,H,c)
+        dmat = jnp.exp(dmat - m_new[..., None])
+        inter = jnp.exp(m_inter - m_new)               # (B,H,c)
+        s_intra = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * dmat
+        # C is (v-dim d, k-dim e): contract q with the k index.
+        h_num = (jnp.einsum("bhts,bhsd->bhtd", s_intra, vc) +
+                 jnp.einsum("bhte,bhde->bhtd", qc, C) * inter[..., None])
+        norm = (s_intra.sum(-1) +
+                jnp.einsum("bhte,bhe->bht", qc, n) * inter)
+        h = h_num / jnp.maximum(jnp.abs(norm),
+                                jnp.exp(-m_new))[..., None]
+        # carry to next chunk
+        Ftot = F[..., -1]
+        m_next = jnp.maximum(Ftot + m, (Ftot[..., None] - F + li).max(-1))
+        decay_state = jnp.exp(Ftot + m - m_next)
+        src = jnp.exp(Ftot[..., None] - F + li - m_next[..., None])
+        C_next = (C * decay_state[..., None, None] +
+                  jnp.einsum("bhs,bhsd,bhse->bhde", src, vc, kc))
+        n_next = n * decay_state[..., None] + jnp.einsum(
+            "bhs,bhse->bhe", src, kc)
+        return (C_next, n_next, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks_, vs, lfs, lis))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h, (C, n, m)
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Single-token recurrent step.  q/k/v: (B,H,dh); gates (B,H)."""
+    C, n, m = state
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32) * dh ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    fg = jnp.exp(logf + m - m_new)
+    ig = jnp.exp(i_pre - m_new)
+    C_new = C * fg[..., None, None] + ig[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])        # (B,H, v-dim d, k-dim e)
+    n_new = n * fg[..., None] + ig[..., None] * kf
+    num = jnp.einsum("bhe,bhde->bhd", qf, C_new)    # contract q with k index
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", qf, n_new)),
+                        jnp.exp(-m_new))
+    h = num / denom[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_block(params, x, *, heads: int, proj_factor: float = 2.0,
+                comp=None, mode="train", state=None, chunk: int = 256):
+    """Full mLSTM residual block. x: (B,S,d)."""
+    spec = LinearSpec.from_config(comp, "ffn")
+    B, S, d = x.shape
+    d_in = int(d * proj_factor)
+    dh = d_in // heads
+    up = apply_linear(params["up"], x, spec, d_in, mode)
+    gate = jax.nn.silu(apply_linear(params["up_gate"], x, spec, d_in, mode))
+    q = apply_linear(params["q"], up, spec, d_in, mode)
+    k = apply_linear(params["k"], up, spec, d_in, mode)
+    v = apply_linear(params["v"], up, spec, d_in, mode)
+    ifg = (up.astype(jnp.float32) @ params["ifg"] + params["ifg_b"])
+    i_pre, f_pre = ifg[..., :heads], ifg[..., heads:]         # (B,S,H)
+
+    def to_heads(t):
+        return t.reshape(B, S, heads, dh).transpose(0, 2, 1, 3)
+
+    if S == 1 and state is not None:
+        h, new_state = mlstm_step(
+            to_heads(q)[:, :, 0], to_heads(k)[:, :, 0], to_heads(v)[:, :, 0],
+            i_pre[:, 0], f_pre[:, 0], state)
+        h = h[:, :, None]
+    else:
+        h, new_state = _mlstm_seq(to_heads(q), to_heads(k), to_heads(v),
+                                  i_pre.transpose(0, 2, 1),
+                                  f_pre.transpose(0, 2, 1),
+                                  state=state, chunk=chunk)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+    # per-head groupnorm-ish: rms over dh
+    hf = h.astype(jnp.float32).reshape(B, S, heads, dh)
+    hf = hf * (jnp.mean(hf * hf, -1, keepdims=True) + 1e-6) ** -0.5
+    h = (hf.reshape(B, S, d_in) * params["onorm_scale"]).astype(x.dtype)
+    out = apply_linear(params["out"], h * gate, spec, d, mode)
+    return out, new_state
+
+
+def init_mlstm_state(batch: int, heads: int, dh: int):
+    return (jnp.zeros((batch, heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, heads, dh), jnp.float32),
+            jnp.full((batch, heads), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with exponential gating — strictly sequential scan.
+# ---------------------------------------------------------------------------
+def init_slstm(key, d_model: int, heads: int, comp=None):
+    spec = LinearSpec.from_config(comp, "ffn")
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": init_linear(ks[0], d_model, 4 * d_model, spec),
+        "wh": jax.random.normal(ks[1], (d_model, 4 * d_model)) * (d_model ** -0.5),
+        "b": jnp.zeros((4 * d_model,)),
+        "out": init_linear(ks[2], d_model, d_model, spec),
+    }
+
+
+def slstm_cell(gates, state):
+    """gates: (B, 4d) pre-activations [i f z o]; state: (c, n, h, m)."""
+    c, n, h, m = state
+    d = c.shape[-1]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(gates.astype(jnp.float32), 4, -1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(params, x, *, comp=None, mode="train", state=None):
+    spec = LinearSpec.from_config(comp, "ffn")
+    B, S, d = x.shape
+    gx = apply_linear(params["wx"], x, spec, 4 * d, mode)     # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+
+    def body(st, g_t):
+        g = g_t + (st[2] @ params["wh"]).astype(jnp.float32) + params["b"]
+        st = slstm_cell(g, st)
+        return st, st[2]
+
+    state, hs = jax.lax.scan(body, state, gx.swapaxes(0, 1).astype(jnp.float32))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                     # (B,S,d)
+    out = apply_linear(params["out"], h, spec, d, mode)
+    return out, state
+
+
+def init_slstm_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, z, jnp.full((batch, d_model), -1e30, jnp.float32))

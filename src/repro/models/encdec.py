@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model) directly into the
+encoder.  Encoder blocks are bidirectional; decoder blocks are causal
+self-attention + cross-attention to the encoder output.  Learned positions
+(whisper uses sinusoidal enc / learned dec; we use learned tables for both —
+backbone-equivalent compute).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.circulant import LinearSpec, apply_linear
+from ..dist.ctx import shard_act
+from ..layers import attention as attn_lib
+from ..layers import embeddings as emb_lib
+from ..layers import ffn as ffn_lib
+from ..layers import norms as norm_lib
+
+
+def _init_enc_block(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg, cfg.d_model, cfg.compression),
+        "ln2": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "mlp": ffn_lib.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.compression,
+                                gated=False),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "self": attn_lib.init_attention(ks[0], cfg, cfg.d_model, cfg.compression),
+        "ln_x": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "cross": attn_lib.init_attention(ks[1], cfg, cfg.d_model, cfg.compression),
+        "ln2": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "mlp": ffn_lib.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.compression,
+                                gated=False),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    enc = [_init_enc_block(k, cfg) for k in enc_keys]
+    dec = [_init_dec_block(k, cfg) for k in dec_keys]
+    return {
+        "embed": emb_lib.init_embedding(ks[2], cfg.padded_vocab(), cfg.d_model),
+        "enc_pos": emb_lib.init_learned_pos(ks[3], cfg.encoder_seq, cfg.d_model),
+        "dec_pos": emb_lib.init_learned_pos(ks[4], cfg.max_position or 4096,
+                                            cfg.d_model),
+        "enc_blocks": jax.tree.map(lambda *a: jnp.stack(a), *enc),
+        "dec_blocks": jax.tree.map(lambda *a: jnp.stack(a), *dec),
+        "enc_norm": norm_lib.init_norm(cfg.norm, cfg.d_model),
+        "final_norm": norm_lib.init_norm(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, *, mode="train",
+           q_chunk=None, kv_chunk=None):
+    q_chunk = q_chunk or cfg.attn_q_chunk
+    kv_chunk = kv_chunk or cfg.attn_kv_chunk
+    """frames: (B, encoder_seq, d_model) stub embeddings -> encoder states."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = frames.astype(dtype) + params["enc_pos"]["pos"].astype(dtype)[None]
+
+    def body(x_, bp):
+        x_ = shard_act(x_)                  # block-boundary sharding pin
+        h = norm_lib.apply_norm(cfg.norm, bp["ln1"], x_)
+        a, _ = attn_lib.attention_block(bp["attn"], h, cfg=cfg, causal=False,
+                                        mode=mode, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk)
+        x_ = x_ + a
+        h = norm_lib.apply_norm(cfg.norm, bp["ln2"], x_)
+        x_ = x_ + ffn_lib.mlp(bp["mlp"], h, d_ff=cfg.d_ff, comp=cfg.compression,
+                              activation="gelu", mode=mode)
+        return x_, None
+
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body)
+    if cfg.unroll_scan:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        params["enc_blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm_lib.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _cross_kv(bp, enc_out, cfg, mode):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    a = cfg.attention
+    spec = LinearSpec.from_config(cfg.compression, "attn", bias=a.qkv_bias)
+    B, Senc, _ = enc_out.shape
+    k = apply_linear(bp["cross"]["k"], enc_out, spec,
+                     a.num_kv_heads * a.head_dim, mode)
+    v = apply_linear(bp["cross"]["v"], enc_out, spec,
+                     a.num_kv_heads * a.head_dim, mode)
+    return (k.reshape(B, Senc, a.num_kv_heads, a.head_dim),
+            v.reshape(B, Senc, a.num_kv_heads, a.head_dim))
+
+
+def decode(params, tokens, enc_out, cfg: ArchConfig, *, mode="train",
+           cache=None, cache_pos=None, cross_cache=None,
+           q_chunk=None, kv_chunk=None):
+    """tokens: (B, S).  Returns (logits, new_cache, cross_cache)."""
+    q_chunk = q_chunk or cfg.attn_q_chunk
+    kv_chunk = kv_chunk or cfg.attn_kv_chunk
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, S = tokens.shape
+    x = emb_lib.embed(params["embed"], tokens).astype(dtype)
+    pos0 = 0 if cache_pos is None else cache_pos
+    idx = pos0 + jnp.arange(S)
+    x = x + params["dec_pos"]["pos"][idx].astype(dtype)[None]
+
+    if cross_cache is None:
+        cross_cache = _all_cross_kv(params, enc_out, cfg, mode)
+
+    def body(carry, xs):
+        x_, = carry
+        bp, ckv, c_in = xs
+        x_ = shard_act(x_)                  # block-boundary sharding pin
+        h = norm_lib.apply_norm(cfg.norm, bp["ln1"], x_)
+        a, c_out = attn_lib.attention_block(
+            bp["self"], h, cfg=cfg, causal=True, cache=c_in,
+            cache_pos=cache_pos, mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk)
+        x_ = x_ + a
+        h = norm_lib.apply_norm(cfg.norm, bp["ln_x"], x_)
+        a, _ = attn_lib.attention_block(
+            bp["cross"], h, cfg=cfg, causal=False, cross_kv=ckv, mode=mode,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        x_ = x_ + a
+        h = norm_lib.apply_norm(cfg.norm, bp["ln2"], x_)
+        x_ = x_ + ffn_lib.mlp(bp["mlp"], h, d_ff=cfg.d_ff, comp=cfg.compression,
+                              activation="gelu", mode=mode)
+        return (x_,), c_out
+
+    fn = body
+    if cfg.remat == "full" and mode == "train":
+        fn = jax.checkpoint(body)
+    if cfg.unroll_scan:
+        outs = []
+        for i in range(cfg.num_layers):
+            xs = jax.tree.map(lambda a: a[i],
+                              (params["dec_blocks"], cross_cache,
+                               cache if cache is not None else 0))
+            if cache is None:
+                xs = (xs[0], xs[1], None)
+            (x,), c_out = fn((x,), xs)
+            outs.append(c_out)
+        new_cache = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                     if cache is not None else None)
+    elif cache is not None:
+        (x,), new_cache = jax.lax.scan(
+            fn, (x,), (params["dec_blocks"], cross_cache, cache))
+    else:
+        (x,), _ = jax.lax.scan(
+            lambda c, xs: fn(c, (*xs, None)), (x,),
+            (params["dec_blocks"], cross_cache))
+        new_cache = None
+
+    x = norm_lib.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = emb_lib.logits(params["embed"], x)
+    return logits, new_cache, cross_cache
+
+
+def _all_cross_kv(params, enc_out, cfg, mode):
+    """Stacked cross-KV for all decoder layers (computed once per request)."""
+    return jax.vmap(lambda bp: _cross_kv(bp, enc_out, cfg, mode),
+                    in_axes=(0,))(params["dec_blocks"])
+
+
+def forward(params, tokens, cfg: ArchConfig, *, frames=None, mode="train",
+            cache=None, cache_pos=None, cross_cache=None, enc_out=None,
+            q_chunk=1024, kv_chunk=1024):
+    """Full enc-dec forward.  Returns (logits, aux, state-dict)."""
+    if enc_out is None:
+        enc_out = encode(params, frames, cfg, mode=mode,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+    logits, new_cache, cross_cache = decode(
+        params, tokens, enc_out, cfg, mode=mode, cache=cache,
+        cache_pos=cache_pos, cross_cache=cross_cache,
+        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+    return logits, aux, {"cache": new_cache, "cross": cross_cache,
+                         "enc_out": enc_out}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Stacked decoder self-attention caches (L, B, S, Hkv, D)."""
+    one = attn_lib.init_kv_cache(batch, max_seq, cfg, 0, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers, *x.shape)), one)

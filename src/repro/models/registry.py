@@ -1,0 +1,150 @@
+"""Unified model API over the decoder-LM and encoder-decoder backbones.
+
+``build_model(cfg)`` returns a ``Model`` with a uniform surface:
+
+    init(key)                                  -> params
+    forward_train(params, batch)               -> (logits, aux)
+    prefill(params, batch, cache)              -> (logits, cache)
+    decode_step(params, tokens, cache, pos)    -> (logits, cache)
+    init_cache(batch, max_seq, dtype)          -> cache pytree
+
+``batch`` carries ``tokens``/``labels`` plus the modality-stub inputs
+(``frames`` for audio, ``patches`` for vision) per the assignment: frontends
+are STUBS — precomputed frame/patch embeddings enter the backbone directly.
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every model
+input of a workload cell — the dry-run lowers against these (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, transformer
+
+
+class Model:
+    """Thin dispatch over the two backbone kinds; all math lives below."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Dict:
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    # -- training ----------------------------------------------------------
+    def forward_train(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            logits, aux, _ = encdec.forward(params, batch["tokens"], cfg,
+                                            frames=batch["frames"],
+                                            mode="train")
+            return logits, aux
+        logits, aux, _ = transformer.forward(
+            params, batch["tokens"], cfg, mode="train",
+            frontend_embeds=batch.get("patches"))
+        return logits, aux
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, batch, cache) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, batch["frames"], cfg, mode="serve")
+            cross = encdec._all_cross_kv(params, enc_out, cfg, "serve")
+            logits, new_self, _ = encdec.decode(
+                params, batch["tokens"], enc_out, cfg, mode="serve",
+                cache=cache["self"], cache_pos=0, cross_cache=cross)
+            return logits, {"self": new_self, "cross": cross}
+        logits, _, new_cache = transformer.forward(
+            params, batch["tokens"], cfg, mode="serve", cache=cache,
+            cache_pos=0, frontend_embeds=batch.get("patches"))
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache, cache_pos) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            logits, new_self, _ = encdec.decode(
+                params, tokens, None, cfg, mode="serve",
+                cache=cache["self"], cache_pos=cache_pos,
+                cross_cache=cache["cross"])
+            return logits, {"self": new_self, "cross": cache["cross"]}
+        logits, _, new_cache = transformer.forward(
+            params, tokens, cfg, mode="serve", cache=cache,
+            cache_pos=cache_pos)
+        return logits, new_cache
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        if dtype is None:
+            dtype = jnp.dtype(cfg.kv_cache_dtype)
+        if cfg.is_encoder_decoder:
+            a = cfg.attention
+            self_cache = encdec.init_cache(cfg, batch, max_seq, dtype)
+            cross = (jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                a.num_kv_heads, a.head_dim), dtype),) * 2
+            return {"self": self_cache, "cross": cross}
+        return transformer.init_cache(cfg, batch, max_seq, dtype)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run (no device allocation).
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "vision_stub":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "vision_stub":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=None) -> Any:
+    """Cache pytree as ShapeDtypeStructs (via eval_shape — zero allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_seq, dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    """All inputs of the step a cell lowers, as ShapeDtypeStructs.
+
+    train  -> {"batch": ...}
+    prefill-> {"batch": ..., "cache": ...}
+    decode -> {"tokens": (B,1), "cache": ..., "cache_pos": scalar}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape),
+                "cache": cache_specs(cfg, B, S)}
+    return {"tokens": _sds((B, 1), jnp.int32),
+            "cache": cache_specs(cfg, B, S),
+            "cache_pos": _sds((), jnp.int32)}

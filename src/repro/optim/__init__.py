@@ -1,0 +1,1 @@
+from . import adamw, grad_compression, schedule  # noqa: F401

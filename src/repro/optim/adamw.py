@@ -1,0 +1,113 @@
+"""AdamW in pure JAX, with optional int8-quantized moments.
+
+The int8 moment store (per-tensor absmax scales, symmetric for m, plus a
+uint8 sqrt-encoded second moment) quarters optimizer-state HBM — the
+difference between fitting and not fitting llama4-maverick's dense baseline
+on 16 GiB chips (DESIGN.md §7).  Both stores expose the same update(); the
+state layout mirrors the param pytree so the sharding rule engine applies
+verbatim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+
+
+# ---------------------------------------------------------------------------
+# int8 moment codec (error is re-absorbed every step by the fresh quantize)
+# ---------------------------------------------------------------------------
+def _q_sym(x):
+    """Symmetric int8 with per-tensor absmax scale (for m, sign-carrying)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq_sym(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _q_pos(x):
+    """uint8 sqrt-companded codec for the (non-negative) second moment."""
+    r = jnp.sqrt(jnp.maximum(x, 0.0))
+    scale = jnp.maximum(jnp.max(r), 1e-12) / 255.0
+    q = jnp.clip(jnp.round(r / scale), 0, 255).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq_pos(q, scale):
+    r = q.astype(jnp.float32) * scale
+    return r * r
+
+
+# ---------------------------------------------------------------------------
+def init(params: Any, cfg: AdamWConfig) -> Dict:
+    if cfg.quantize_moments:
+        def zq(p):
+            return {"m": jnp.zeros(p.shape, jnp.int8),
+                    "m_s": jnp.zeros((), jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.uint8),
+                    "v_s": jnp.zeros((), jnp.float32)}
+        mv = jax.tree.map(zq, params)
+    else:
+        mv = jax.tree.map(
+            lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                       "v": jnp.zeros(p.shape, jnp.float32)}, params)
+    return {"mv": mv, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads: Any, state: Dict, params: Any, cfg: AdamWConfig,
+           lr: Optional[jax.Array] = None) -> Tuple[Any, Dict]:
+    """One AdamW step.  Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    lr = cfg.lr if lr is None else lr
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def one(g, p, mv):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m = _dq_sym(mv["m"], mv["m_s"])
+            v = _dq_pos(mv["v"], mv["v_s"])
+        else:
+            m, v = mv["m"], mv["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+        new_p = (p.astype(jnp.float32) - lr * (upd + decay * p.astype(jnp.float32)))
+        if cfg.quantize_moments:
+            mq, ms = _q_sym(m)
+            vq, vs = _q_pos(v)
+            return new_p.astype(p.dtype), {"m": mq, "m_s": ms, "v": vq, "v_s": vs}
+        return new_p.astype(p.dtype), {"m": m, "v": v}
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_mv = treedef.flatten_up_to(state["mv"])
+    out = [one(g, p, mv) for g, p, mv in zip(flat_g, flat_p, flat_mv)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mv = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mv": new_mv, "count": count}

@@ -1,0 +1,1 @@
+from . import analysis  # noqa: F401

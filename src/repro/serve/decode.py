@@ -1,0 +1,48 @@
+"""Serving step builders: prefill and single-token decode.
+
+These are the functions the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` cells, and the engine jit-calls for real serving.
+The decode step donates the cache (in-place ring-buffer update — the paper's
+in-place activation memory, as XLA buffer donation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.registry import Model, build_model
+
+
+def make_prefill_step(cfg: ArchConfig, logits_sharding=None) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache) -> Tuple[jax.Array, Any]:
+        logits, new_cache = model.prefill(params, batch, cache)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        # return only last-position logits: serving samples the next token
+        return logits[:, -1:], new_cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, sample: bool = False,
+                     temperature: float = 1.0,
+                     logits_sharding=None) -> Callable:
+    model = build_model(cfg)
+
+    def decode_step(params, tokens, cache, cache_pos):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              cache_pos)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        if sample:
+            key = jax.random.fold_in(jax.random.PRNGKey(17), cache_pos)
+            nxt = jax.random.categorical(
+                key, logits[:, -1].astype(jnp.float32) / temperature, -1)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return logits, nxt.astype(jnp.int32), new_cache
+    return decode_step

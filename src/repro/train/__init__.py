@@ -1,0 +1,1 @@
+from . import checkpoint, train_step, trainer  # noqa: F401

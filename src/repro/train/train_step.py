@@ -1,0 +1,163 @@
+"""Training step: loss, gradient accumulation, NaN guard, optimizer update.
+
+``make_train_step(cfg, ...)`` returns a pure ``(state, batch) -> (state,
+metrics)`` function ready for jit with donated state.  Design points for the
+1000+-node posture (DESIGN.md §7):
+
+* microbatch gradient accumulation via ``lax.scan`` — under SPMD the
+  per-microbatch backward's gradient reduce-scatter overlaps the next
+  microbatch's compute (XLA latency-hiding scheduler);
+* optional int8 error-feedback gradient compression before the update
+  (wire-format on the cross-pod axis — optim/grad_compression.py);
+* non-finite-gradient guard: a bad step (hardware flake, loss spike)
+  SKIPS the update instead of poisoning the weights, and is counted in
+  ``state["skipped"]`` for the trainer's telemetry;
+* Bayesian (variational-inference) mode per the paper: sample weights via
+  reparameterization, add KL/num_examples to the loss (core/bayesian.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import bayesian
+from ..models.registry import Model, build_model
+from ..optim import adamw, grad_compression, schedule
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  zloss: float = 0.0) -> jax.Array:
+    """Mean token NLL in f32 (+ z-loss on the partition function).
+
+    Sharding-friendly by construction: the label log-prob is a one-hot
+    contraction (reduces over the vocab axis WITHOUT gathering it — under a
+    vocab-sharded TP layout this is a partial sum + tiny all-reduce), never
+    a take_along_axis gather (which GSPMD can only serve by all-gathering
+    the full (B,S,V) f32 logits — measured at +443 GB/step on the
+    tinyllama dry-run before this fix; see EXPERIMENTS.md §Perf).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - ll).mean()
+    if zloss:
+        nll = nll + zloss * jnp.square(lse).mean()
+    return nll
+
+
+def make_loss_fn(cfg: ArchConfig, model: Optional[Model] = None,
+                 moe_aux_coef: float = 0.01,
+                 logits_sharding=None) -> Callable:
+    model = model or build_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward_train(params, batch)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        nll = cross_entropy(logits, batch["labels"], cfg.zloss)
+        loss = nll + moe_aux_coef * aux.get("moe_aux", 0.0)
+        return loss, {"loss": loss, "nll": nll,
+                      "moe_aux": aux.get("moe_aux", jnp.zeros(()))}
+    return loss_fn
+
+
+def init_state(key, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+               compress_grads: bool = False,
+               bayesian_mode: bool = False) -> Dict:
+    model = build_model(cfg)
+    params = model.init(key)
+    if bayesian_mode:
+        params = bayesian.init_bayesian(params)
+    state = {
+        "params": params,
+        "opt": adamw.init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+        "skipped": jnp.zeros((), jnp.int32),
+    }
+    if compress_grads:
+        state["ef"] = grad_compression.init_error_feedback(params)
+    return state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    *, accum: int = 1, moe_aux_coef: float = 0.01,
+                    lr_schedule: Optional[Callable] = None,
+                    compress_grads: bool = False,
+                    bayesian_mode: bool = False,
+                    num_examples: int = 1_000_000,
+                    logits_sharding=None) -> Callable:
+    model = build_model(cfg)
+    base_loss = make_loss_fn(cfg, model, moe_aux_coef, logits_sharding)
+
+    if bayesian_mode:
+        def loss_fn(bparams, batch, step):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+            w, kl = bayesian.sample(key, bparams), bayesian.kl_to_prior(bparams)
+            loss, metrics = base_loss(w, batch)
+            loss = loss + kl / num_examples
+            metrics = dict(metrics, kl=kl, loss=loss)
+            return loss, metrics
+    else:
+        def loss_fn(params, batch, step):
+            return base_loss(params, batch)
+
+    def grads_of(params, batch, step):
+        if accum <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, step)
+
+        def micro(carry, mb):
+            (g_acc, m_acc) = carry
+            (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, step)
+            return (jax.tree.map(jnp.add, g_acc, g),
+                    jax.tree.map(jnp.add, m_acc, m)), None
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": jnp.zeros(()), "nll": jnp.zeros(()),
+              "moe_aux": jnp.zeros(())}
+        if bayesian_mode:
+            m0["kl"] = jnp.zeros(())
+        (g, m), _ = jax.lax.scan(micro, (g0, m0), mbs)
+        scale = 1.0 / accum
+        return ((m["loss"] * scale, jax.tree.map(lambda x: x * scale, m)),
+                jax.tree.map(lambda x: x * scale, g))
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        (loss, metrics), grads = grads_of(params, batch, state["step"])
+
+        if compress_grads:
+            grads, new_ef = grad_compression.compress_decompress(
+                grads, state["ef"])
+
+        gnorm = adamw.global_norm(grads)
+        ok = jnp.isfinite(gnorm) & jnp.isfinite(loss)
+        lr = (lr_schedule(state["step"]) if lr_schedule is not None
+              else opt_cfg.lr)
+        new_params, new_opt = adamw.update(grads, state["opt"], params,
+                                           opt_cfg, lr)
+        # NaN/inf guard: keep old params & opt state on a bad step
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(ok, n, o), new_params, params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(ok, n, o), new_opt, state["opt"])
+
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1,
+                         skipped=state["skipped"] + (1 - ok.astype(jnp.int32)))
+        if compress_grads:
+            new_state["ef"] = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_ef, state["ef"])
+        metrics = dict(metrics, grad_norm=gnorm, lr=jnp.asarray(lr),
+                       ok=ok.astype(jnp.int32))
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md §7), exercised at host scale by the examples:
+
+* auto-resume from the newest intact checkpoint (atomic writes mean a
+  preemption mid-save can't corrupt it);
+* periodic atomic checkpoints + terminal-signal checkpoint (preemption);
+* NaN/inf steps are SKIPPED inside the jit'd step (train_step.py) and
+  surfaced here as telemetry;
+* heartbeat file per host — a watchdog (or test) detects stragglers /
+  hangs by heartbeat age, the restart path is just "run the same command";
+* deterministic step-indexed data: no pipeline state to restore, stragglers
+  never desynchronize the batch contents.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import checkpoint as ckpt
+from . import train_step as ts
+from ..optim import adamw, schedule
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: Optional[adamw.AdamWConfig] = None, *,
+                 workdir: str = "/tmp/repro_run", data_fn: Callable,
+                 total_steps: int = 100, ckpt_every: int = 50,
+                 accum: int = 1, log_every: int = 10,
+                 compress_grads: bool = False, bayesian_mode: bool = False,
+                 heartbeat_timeout: float = 600.0, lr_schedule=None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.workdir = workdir
+        self.data_fn = data_fn
+        self.total_steps = total_steps
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.heartbeat_timeout = heartbeat_timeout
+        os.makedirs(workdir, exist_ok=True)
+        lr_fn = lr_schedule or (
+            lambda step: schedule.warmup_cosine(
+                step, peak_lr=self.opt_cfg.lr,
+                warmup_steps=max(total_steps // 20, 1),
+                total_steps=total_steps))
+        self.step_fn = jax.jit(
+            ts.make_train_step(cfg, self.opt_cfg, accum=accum,
+                               lr_schedule=lr_fn,
+                               compress_grads=compress_grads,
+                               bayesian_mode=bayesian_mode),
+            donate_argnums=(0,))
+        self._state = None
+        self._preempted = False
+        self.compress_grads = compress_grads
+        self.bayesian_mode = bayesian_mode
+        self.history: list = []
+
+    # -- fault-tolerance plumbing ------------------------------------------
+    def _heartbeat(self, step: int):
+        hb = {"step": step, "time": time.time(),
+              "host": jax.process_index()}
+        with open(os.path.join(self.workdir, "heartbeat.json"), "w") as f:
+            json.dump(hb, f)
+
+    @staticmethod
+    def heartbeat_age(workdir: str) -> float:
+        """Straggler/hang detection: seconds since last heartbeat."""
+        path = os.path.join(workdir, "heartbeat.json")
+        if not os.path.exists(path):
+            return float("inf")
+        with open(path) as f:
+            return time.time() - json.load(f)["time"]
+
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True          # checkpoint at next step boundary
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass                            # non-main thread (tests)
+
+    # -- the loop -----------------------------------------------------------
+    def init_or_restore(self, key=None) -> Dict:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        state = ts.init_state(key, self.cfg, self.opt_cfg,
+                              compress_grads=self.compress_grads,
+                              bayesian_mode=self.bayesian_mode)
+        try:
+            state, step = ckpt.restore(
+                os.path.join(self.workdir, "ckpt"), state)
+            print(f"[trainer] resumed from step {step}", flush=True)
+        except FileNotFoundError:
+            pass
+        self._state = state
+        return state
+
+    def run(self) -> Dict:
+        self._install_preemption_handler()
+        if self._state is None:
+            self.init_or_restore()
+        state = self._state
+        start = int(state["step"])
+        ckpt_dir = os.path.join(self.workdir, "ckpt")
+        for step in range(start, self.total_steps):
+            batch = self.data_fn(step)
+            state, metrics = self.step_fn(state, batch)
+            if (step + 1) % self.log_every == 0 or step == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step + 1
+                self.history.append(m)
+                print(f"[trainer] step {step+1} "
+                      f"loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f} "
+                      f"skipped={int(state['skipped'])}", flush=True)
+            self._heartbeat(step + 1)
+            if (step + 1) % self.ckpt_every == 0 or self._preempted:
+                ckpt.save(ckpt_dir, step + 1, state)
+                if self._preempted:
+                    print("[trainer] preemption checkpoint saved; exiting",
+                          flush=True)
+                    break
+        ckpt.save(ckpt_dir, int(state["step"]), state)
+        self._state = state
+        return state

@@ -1,0 +1,11 @@
+"""Shared test config.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benchmarks must see the real single CPU device; only the dry-run (and the
+subprocess-based sharding tests) force a 512/8-device host platform."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield

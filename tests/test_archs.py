@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests (assignment §f).
+
+Each assigned architecture is instantiated in a REDUCED config of the same
+family and runs: one forward/train step, one prefill, and one decode step on
+CPU, asserting output shapes and no NaNs.  Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models.registry import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model))
+    elif cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    cfg = get_smoke_config(request.param)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_full_config_matches_assignment(arch):
+    """The FULL config carries the published numbers (spot checks)."""
+    cfg_small, _, _ = arch
+    cfg = get_config(cfg_small.name)
+    expect = {
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    }[cfg.name]
+    got = (cfg.num_layers, cfg.d_model, cfg.attention.num_heads,
+           cfg.attention.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expect, f"{cfg.name}: {got} != {expect}"
+
+
+def test_train_forward(arch):
+    cfg, model, params = arch
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = model.forward_train(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab())
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+def test_prefill_then_decode(arch):
+    cfg, model, params = arch
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    cache = model.init_cache(B, S + 4, dtype=jnp.float32)
+    logits, cache = model.prefill(params, batch, cache)
+    assert logits.shape[:2] == (B, S)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    logits2, cache = model.decode_step(params, tok, cache, jnp.int32(S))
+    assert logits2.shape == (B, 1, cfg.padded_vocab())
+    assert not bool(jnp.isnan(logits2.astype(jnp.float32)).any())
+
+
+def test_decode_matches_full_forward(arch):
+    """Teacher-forced decode equals the parallel forward (cache correctness)."""
+    cfg, model, params = arch
+    if cfg.attention.sliding_window and not cfg.is_encoder_decoder:
+        win = cfg.attention.sliding_window
+        if win < S:
+            pytest.skip("ring-buffer prefill covered by dedicated SWA test")
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    full_logits, _ = model.forward_train(params, batch)
+
+    n_pre = S - 4
+    pre = {k: (v[:, :n_pre] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    logits, cache = model.prefill(params, pre, cache)
+    outs = [logits[:, -1]]
+    for t in range(n_pre, S - 1):
+        lg, cache = model.decode_step(
+            params, batch["tokens"][:, t:t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)                # logits for positions n_pre-1..S-2
+    ref = full_logits[:, n_pre - 1:S - 1]
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,133 @@
+"""Checkpoint atomicity/integrity/resume + data-pipeline determinism."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, AttentionConfig, CompressionConfig
+from repro.data import pipeline
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt
+from repro.train import train_step as ts
+from repro.train.trainer import Trainer
+
+
+@pytest.fixture
+def tiny_cfg():
+    return ArchConfig(
+        name="tiny", num_layers=2, d_model=32, d_ff=64, vocab_size=128,
+        attention=AttentionConfig(num_heads=2, num_kv_heads=1, head_dim=16),
+        compression=CompressionConfig(enabled=True, block_ffn=8,
+                                      block_attn=8),
+        remat="none")
+
+
+def test_roundtrip(tmp_path, tiny_cfg):
+    opt = adamw.AdamWConfig()
+    state = ts.init_state(jax.random.PRNGKey(0), tiny_cfg, opt)
+    ckpt.save(str(tmp_path), 7, state)
+    like = ts.init_state(jax.random.PRNGKey(1), tiny_cfg, opt)
+    restored, step = ckpt.restore(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_integrity_check(tmp_path, tiny_cfg):
+    opt = adamw.AdamWConfig()
+    state = ts.init_state(jax.random.PRNGKey(0), tiny_cfg, opt)
+    path = ckpt.save(str(tmp_path), 1, state)
+    with open(os.path.join(path, "arrays.npz"), "ab") as f:
+        f.write(b"corruption")
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), state)
+
+
+def test_keep_prunes_old(tmp_path, tiny_cfg):
+    opt = adamw.AdamWConfig()
+    state = ts.init_state(jax.random.PRNGKey(0), tiny_cfg, opt)
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, state, keep=2)
+    assert ckpt.latest_steps(str(tmp_path)) == [3, 4]
+
+
+def test_trainer_resume(tmp_path, tiny_cfg):
+    """Kill after N steps; a fresh Trainer resumes from the checkpoint and
+    reaches an identical final state as an uninterrupted run (determinism +
+    fault tolerance)."""
+    data_kw = dict(batch=2, seq=16, seed=5)
+
+    def make(workdir, total):
+        cfg = tiny_cfg
+        return Trainer(cfg, adamw.AdamWConfig(lr=1e-3),
+                       workdir=str(workdir), total_steps=total,
+                       ckpt_every=4, log_every=100,
+                       lr_schedule=lambda s: 1e-3,   # step-count independent
+                       data_fn=pipeline.SyntheticLM(cfg, **data_kw))
+
+    t_full = make(tmp_path / "full", 8)
+    full_state = t_full.run()
+
+    t_a = make(tmp_path / "resume", 4)
+    t_a.run()                                   # "preempted" at step 4
+    t_b = make(tmp_path / "resume", 8)
+    resumed_state = t_b.run()
+    assert int(resumed_state["step"]) == 8
+    for a, b in zip(jax.tree.leaves(full_state["params"]),
+                    jax.tree.leaves(resumed_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_heartbeat(tmp_path, tiny_cfg):
+    t = Trainer(tiny_cfg, adamw.AdamWConfig(), workdir=str(tmp_path),
+                total_steps=2, ckpt_every=10, log_every=1,
+                data_fn=pipeline.SyntheticLM(tiny_cfg, batch=2, seq=8))
+    assert Trainer.heartbeat_age(str(tmp_path)) == float("inf")
+    t.run()
+    assert Trainer.heartbeat_age(str(tmp_path)) < 60.0
+
+
+def test_synthetic_determinism(tiny_cfg):
+    d1 = pipeline.SyntheticLM(tiny_cfg, batch=4, seq=16, seed=9)
+    d2 = pipeline.SyntheticLM(tiny_cfg, batch=4, seq=16, seed=9)
+    for step in (0, 3, 1000):
+        b1, b2 = d1(step), d2(step)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(d1(0)["tokens"]),
+                              np.asarray(d1(1)["tokens"]))
+
+
+def test_synthetic_has_signal(tiny_cfg):
+    """Labels follow the bigram table 90% of the time — learnable."""
+    d = pipeline.SyntheticLM(tiny_cfg, batch=8, seq=64, seed=0)
+    b = d(0)
+    succ = d._succ
+    toks = np.asarray(b["tokens"])
+    labs = np.asarray(b["labels"])
+    match = (succ[toks] == labs).mean()
+    assert match > 0.8
+
+
+def test_file_tokens(tmp_path, tiny_cfg):
+    arr = np.arange(10000, dtype=np.uint16)
+    path = str(tmp_path / "toks.bin")
+    arr.tofile(path)
+    d = pipeline.FileTokens(tiny_cfg, path, batch=2, seq=16)
+    b0, b0b = d(0), d(0)
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(b0b["tokens"]))
+    np.testing.assert_array_equal(
+        np.asarray(b0["labels"][:, :-1]), np.asarray(b0["tokens"][:, 1:]))
+
+
+def test_host_sharding(tiny_cfg):
+    d = pipeline.SyntheticLM(tiny_cfg, batch=8, seq=8, seed=1)
+    b = d(0)
+    parts = [pipeline.shard_for_host(b, i, 4) for i in range(4)]
+    glued = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(glued, np.asarray(b["tokens"]))

@@ -1,0 +1,160 @@
+"""Unit + property tests for the paper's core contribution (core/circulant).
+
+Covers: the three lowerings agree; the hand-derived block-circulant backward
+(Eqns. 2-3) matches autodiff through the materialized dense circulant; the
+DFT-as-matmul lowering equals true rfft/irfft; padding semantics; structure
+preservation (training only ever updates first-row generators); and
+compression accounting vs. closed forms.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circulant as cc
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# Lowering equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_in,n_out,k", [
+    (32, 32, 8), (48, 32, 16), (64, 128, 32), (50, 30, 16), (17, 9, 4),
+])
+def test_paths_agree(n_in, n_out, k):
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), n_in, n_out, k)
+    x = _rand(1, 5, n_in)
+    yd = cc.bc_matmul_direct(x, w, n_out)
+    yf = cc.bc_matmul_fft(x, w, n_out)
+    ys = cc.bc_matmul_spectral(x, cc.spectral_cache(w), k, n_out)
+    ysn = cc.bc_matmul_spectral(x, cc.spectral_cache(w, gauss=False), k,
+                                n_out, gauss=False)
+    np.testing.assert_allclose(yd, yf, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(yd, ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(yd, ysn, rtol=2e-4, atol=2e-4)
+
+
+def test_dft_matmul_equals_true_fft():
+    for k in (4, 8, 16, 64, 128, 256):
+        x = _rand(k, 3, k)
+        xr, xi = cc.rfft_planes(x, k)
+        ref = jnp.fft.rfft(x, axis=-1)
+        np.testing.assert_allclose(xr, jnp.real(ref), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(xi, jnp.imag(ref), rtol=1e-4, atol=1e-4)
+        y = cc.irfft_planes(xr, xi, k)
+        np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-4)
+
+
+def test_fft_impl_switch_matches():
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), 64, 64, 32)
+    x = _rand(2, 4, 64)
+    y_dft = cc.bc_matmul_fft(x, w, 64)
+    old = cc.FFT_IMPL
+    try:
+        cc.FFT_IMPL = "xla_fft"
+        y_fft = cc.bc_matmul_fft(x, w, 64)
+    finally:
+        cc.FFT_IMPL = old
+    np.testing.assert_allclose(y_dft, y_fft, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# The paper's backward pass (Eqns. 2-3) — custom_vjp correctness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_in,n_out,k", [(48, 32, 16), (40, 56, 8)])
+def test_custom_vjp_matches_dense_autodiff(n_in, n_out, k):
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), n_in, n_out, k)
+    x = _rand(1, 3, 4, n_in)
+
+    def loss_fft(w, x):
+        return jnp.sum(jnp.sin(cc.bc_matmul_fft(x, w, n_out)))
+
+    def loss_dir(w, x):
+        return jnp.sum(jnp.sin(cc.bc_matmul_direct(x, w, n_out)))
+
+    gf = jax.grad(loss_fft, argnums=(0, 1))(w, x)
+    gd = jax.grad(loss_dir, argnums=(0, 1))(w, x)
+    np.testing.assert_allclose(gf[0], gd[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(gf[1], gd[1], rtol=2e-4, atol=2e-4)
+
+
+def test_gradient_is_first_row_only():
+    """The paper learns first-row generators directly: the gradient exists
+    only on the (p, q, k) generators — circulant structure is preserved by
+    construction, no projection step."""
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), 32, 32, 16)
+    x = _rand(1, 4, 32)
+    g = jax.grad(lambda w: jnp.sum(cc.bc_matmul_fft(x, w, 32) ** 2))(w)
+    assert g.shape == w.shape == (2, 2, 16)
+    dense = cc.materialize_dense(w - 0.01 * g, 32, 32)
+    # dense result of a gradient step is still exactly block-circulant
+    blocks = dense.reshape(2, 16, 2, 16)
+    for i in range(2):
+        for j in range(2):
+            b = blocks[:, :, j, :][i]
+            for r in range(1, 16):
+                np.testing.assert_allclose(np.roll(np.asarray(b[0]), r),
+                                           np.asarray(b[r]), rtol=1e-5,
+                                           atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.sampled_from([2, 4, 8, 16]),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_matches_dense(p, q, k, seed):
+    """∀ shapes: the FFT path equals multiplication by the materialized
+    block-circulant matrix (the circulant convolution theorem)."""
+    n_in, n_out = q * k, p * k
+    w = cc.init_block_circulant(jax.random.PRNGKey(seed), n_in, n_out, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n_in))
+    yd = cc.bc_matmul_direct(x, w, n_out)
+    yf = cc.bc_matmul_fft(x, w, n_out)
+    np.testing.assert_allclose(yd, yf, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.sampled_from([4, 8, 16]))
+def test_property_linearity(a, b, k):
+    """Linearity in both arguments (exercises zero-padding correctness)."""
+    n_in, n_out = max(a, 1), max(b, 1)
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), n_in, n_out, k)
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (3, n_in))
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (3, n_in))
+    y = cc.bc_matmul_fft(x1 + 2.0 * x2, w, n_out)
+    y12 = (cc.bc_matmul_fft(x1, w, n_out) +
+           2.0 * cc.bc_matmul_fft(x2, w, n_out))
+    np.testing.assert_allclose(y, y12, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Accounting (paper Fig. 3 / complexity claims)
+# ---------------------------------------------------------------------------
+def test_param_count_is_k_fold_smaller():
+    for (m, n, k) in [(1024, 1024, 128), (4096, 14336, 128)]:
+        dense = m * n
+        bc = cc.num_blocks(m, k) * cc.num_blocks(n, k) * k
+        assert dense / bc == k       # exact k-fold compression
+
+def test_bc_flops_scaling():
+    """O(n log n + n²/k): doubling k halves the MAC term."""
+    f128 = cc.bc_flops(1, 4096, 4096, 128)
+    f64 = cc.bc_flops(1, 4096, 4096, 64)
+    assert f64 > f128                # smaller blocks -> more MACs
+    dense = cc.dense_flops(1, 4096, 4096)
+    assert dense / f128 > 20         # order-of-magnitude acceleration
+
+
+def test_spectral_cache_storage_halves():
+    b_full = cc.bc_param_bytes(1024, 1024, 128, spectral=False)
+    b_spec = cc.bc_param_bytes(1024, 1024, 128, spectral=True)
+    # 2*(k/2+1) reals vs k reals: ~= parity (the rfft symmetry saving)
+    assert b_spec / b_full == pytest.approx(2 * (65) / 128, rel=0.01)

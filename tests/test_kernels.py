@@ -1,0 +1,114 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles,
+swept over shapes and dtypes (assignment §c)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as kfa
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels import spectral_matmul as ksm
+
+
+# ---------------------------------------------------------------------------
+# spectral_matmul: the paper's frequency-domain MAC phase on the MXU
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("F,B,Q,P", [
+    (9, 4, 3, 5), (65, 8, 16, 16), (5, 130, 2, 140), (33, 16, 44, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spectral_matmul_sweep(F, B, Q, P, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xr = jax.random.normal(ks[0], (F, B, Q), dtype)
+    xi = jax.random.normal(ks[1], (F, B, Q), dtype)
+    wr = jax.random.normal(ks[2], (F, Q, P), dtype)
+    wi = jax.random.normal(ks[3], (F, Q, P), dtype)
+    yr0, yi0 = kref.spectral_matmul_ref(xr, xi, wr, wi)
+    yr1, yi1 = ksm.spectral_matmul(xr, xi, wr, wi - wr, wr + wi,
+                                   block_b=64, block_p=64, interpret=True)
+    np.testing.assert_allclose(yr0, yr1, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(yi0, yi1, rtol=2e-4, atol=2e-4)
+
+
+def test_spectral_matmul_dispatch_modes(monkeypatch):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    xr, xi = (jax.random.normal(k, (5, 4, 3)) for k in ks[:2])
+    wr, wi = (jax.random.normal(k, (5, 3, 6)) for k in ks[2:])
+    off = kops.spectral_matmul(xr, xi, wr, wi - wr, wr + wi, mode="off")
+    interp = kops.spectral_matmul(xr, xi, wr, wi - wr, wr + wi,
+                                  mode="interpret")
+    np.testing.assert_allclose(off[0], interp[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(off[1], interp[1], rtol=1e-4, atol=1e-4)
+
+
+def test_spectral_kernel_gauss_vs_naive_flops():
+    """Gauss trick: 3 dots instead of 4 — verify identical math."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xr, xi = (jax.random.normal(k, (7, 8, 6)) for k in ks[:2])
+    wr, wi = (jax.random.normal(k, (7, 6, 9)) for k in ks[2:])
+    t1 = jnp.einsum("fbq,fqp->fbp", xr + xi, wr)
+    t2 = jnp.einsum("fbq,fqp->fbp", xr, wi - wr)
+    t3 = jnp.einsum("fbq,fqp->fbp", xi, wr + wi)
+    yr0, yi0 = kref.spectral_matmul_ref(xr, xi, wr, wi)
+    np.testing.assert_allclose(t1 - t3, yr0, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(t1 + t2, yi0, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: causal / window / softcap / GQA / decode offset
+# ---------------------------------------------------------------------------
+CASES = [
+    dict(causal=True, window=0, softcap=0.0, Hq=4, Hkv=4),
+    dict(causal=True, window=0, softcap=30.0, Hq=4, Hkv=2),
+    dict(causal=True, window=32, softcap=0.0, Hq=8, Hkv=2),
+    dict(causal=False, window=0, softcap=0.0, Hq=4, Hkv=1),
+    dict(causal=True, window=16, softcap=50.0, Hq=2, Hkv=1),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Sq, Skv, D = 2, 64, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, case["Hq"], Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, case["Hkv"], Skv, D), dtype)
+    v = jax.random.normal(ks[2], (B, case["Hkv"], Skv, D), dtype)
+    kw = {kk: case[kk] for kk in ("causal", "window", "softcap")}
+    ref = kref.attention_ref(q, k, v, **kw)
+    out = kfa.flash_attention(q, k, v, block_q=32, block_k=32,
+                              interpret=True, **kw)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_decode_offset():
+    """Sq=1 decode query attending a longer cache with kv_offset."""
+    B, Skv, D = 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 4, 1, D))
+    k = jax.random.normal(ks[1], (B, 2, Skv, D))
+    v = jax.random.normal(ks[2], (B, 2, Skv, D))
+    for off in (17, 63):
+        ref = kref.attention_ref(q, k, v, causal=True, kv_offset=off)
+        out = kfa.flash_attention(q, k, v, causal=True, kv_offset=off,
+                                  block_q=1, block_k=32, interpret=True)
+        np.testing.assert_allclose(ref, out, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_odd_shapes():
+    """Non-multiple-of-block shapes pad correctly."""
+    B, Sq, Skv, D = 1, 48, 80, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 2, Sq, D))
+    k = jax.random.normal(ks[1], (B, 2, Skv, D))
+    v = jax.random.normal(ks[2], (B, 2, Skv, D))
+    ref = kref.attention_ref(q, k, v, causal=True, kv_offset=Skv - Sq)
+    out = kfa.flash_attention(q, k, v, causal=True, kv_offset=Skv - Sq,
+                              block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(ref, out, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,150 @@
+"""MoE routing semantics, block-circulant CONV (paper's CONV generalization),
+and variational-inference Bayesian training (paper co-optimization leg 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import bayesian, circulant as cc, conv as ccv
+from repro.layers import ffn
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def _moe_setup(E=4, topk=2, d=16, dff=32, cf=8.0, bc=0):
+    moe_cfg = MoEConfig(num_experts=E, top_k=topk, capacity_factor=cf,
+                        router_group_size=32)
+    comp = None
+    if bc:
+        from repro.configs.base import CompressionConfig
+        comp = CompressionConfig(enabled=True, block_expert=bc)
+    params = ffn.init_moe(jax.random.PRNGKey(0), d, dff, moe_cfg, comp)
+    return params, moe_cfg, comp
+
+
+def test_moe_output_shape_and_aux():
+    params, moe_cfg, _ = _moe_setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+    out, aux = ffn.moe(params, x, d_ff=32, moe_cfg=moe_cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3     # Switch aux lower bound E*(1/E)
+
+
+def test_moe_single_expert_equals_mlp_structure():
+    """With E=1, routing is trivial: every token hits the same expert."""
+    params, moe_cfg, _ = _moe_setup(E=1, topk=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16))
+    out, _ = ffn.moe(params, x, d_ff=32, moe_cfg=moe_cfg)
+    e = params["experts"]
+    up = x @ e["up"][0]
+    gate = jax.nn.silu(x @ e["gate"][0])
+    ref = (gate * up) @ e["down"][0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_circulant_experts():
+    params, moe_cfg, comp = _moe_setup(bc=8)
+    assert params["experts"]["up"].ndim == 4     # (E, p, q, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+    out, _ = ffn.moe(params, x, d_ff=32, moe_cfg=moe_cfg, comp=comp)
+    assert out.shape == x.shape
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_moe_decode_dropless():
+    """serve-mode single-token step never drops tokens (cap == group)."""
+    params, moe_cfg, _ = _moe_setup(E=4, topk=1, cf=0.01)  # tiny capacity
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 1, 16))
+    out_serve, _ = ffn.moe(params, x, d_ff=32, moe_cfg=moe_cfg, mode="serve")
+    # every token got its expert output (no zeroed rows)
+    norms = jnp.linalg.norm(out_serve.reshape(8, -1), axis=-1)
+    assert bool((norms > 1e-6).all())
+
+
+def test_moe_grad_flows_to_router():
+    params, moe_cfg, _ = _moe_setup()
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 16))
+
+    def loss(p):
+        out, aux = ffn.moe(p, x, d_ff=32, moe_cfg=moe_cfg)
+        return jnp.sum(out ** 2) + 0.01 * aux
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["router"]).sum()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# CONV layers (paper: block-circulant F(r,r,C,P) via im2col)
+# ---------------------------------------------------------------------------
+def test_im2col_matches_dense_conv():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 3))
+    f = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5))
+    ref = ccv.conv2d_dense(x, f)
+    cols = ccv.im2col(x, 3)
+    flat = f.reshape(9, 3, 5).reshape(27, 5)   # (r*r, C, P) -> (r²C, P)
+    out = cols @ flat
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_conv_circulant_equals_materialized():
+    """Circulant conv == dense conv with the materialized circulant filter —
+    the paper's claim that im2col'd F is block-circulant."""
+    r, C, P, k = 3, 4, 8, 4
+    w = ccv.init_conv_circulant(jax.random.PRNGKey(0), r, C, P, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 6, C))
+    out = ccv.conv2d_block_circulant(x, w, r, P)
+    dense_F = cc.materialize_dense(w, cc.num_blocks(P, k) * k,
+                                   cc.num_blocks(r * r * C, k) * k)
+    dense_F = dense_F[:P, :r * r * C].T        # (r²C, P)
+    f = dense_F.reshape(r * r, C, P).reshape(r, r, C, P)
+    ref = ccv.conv2d_dense(x, f)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_conv_training_step():
+    r, C, P, k = 3, 2, 4, 4
+    w = ccv.init_conv_circulant(jax.random.PRNGKey(0), r, C, P, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 5, C))
+
+    def loss(w):
+        return jnp.sum(ccv.conv2d_block_circulant(x, w, r, P) ** 2)
+    g = jax.grad(loss)(w)
+    assert g.shape == w.shape
+    assert float(jnp.abs(g).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Bayesian (variational inference) training
+# ---------------------------------------------------------------------------
+def test_bayesian_wrap_sample_mean():
+    params = {"a": jnp.ones((4, 4)), "nest": {"b": jnp.zeros((3,))}}
+    bp = bayesian.init_bayesian(params)
+    w = bayesian.sample(jax.random.PRNGKey(0), bp)
+    assert w["a"].shape == (4, 4)
+    mean = bayesian.posterior_mean(bp)
+    np.testing.assert_array_equal(np.asarray(mean["a"]),
+                                  np.asarray(params["a"]))
+    # sigma = softplus(-5) ~ 0.0067: samples close to mean but not equal
+    assert 0 < float(jnp.abs(w["a"] - params["a"]).max()) < 0.1
+
+
+def test_kl_positive_and_zero_at_prior():
+    params = {"a": jnp.zeros((8,))}
+    bp = bayesian.init_bayesian(params, init_rho=jnp.log(jnp.expm1(1.0)))
+    kl = bayesian.kl_to_prior(bp, prior_sigma=1.0)
+    assert float(kl) == pytest.approx(0.0, abs=1e-5)
+    bp2 = bayesian.init_bayesian({"a": 3.0 * jnp.ones((8,))})
+    assert float(bayesian.kl_to_prior(bp2)) > 0
+
+
+def test_elbo_loss_runs():
+    params = {"w": jnp.ones((4,))}
+    bp = bayesian.init_bayesian(params)
+    loss, w = bayesian.elbo_loss(
+        jax.random.PRNGKey(0), bp, lambda p: jnp.sum(p["w"] ** 2),
+        num_examples=100)
+    assert jnp.isfinite(loss)

@@ -1,0 +1,94 @@
+"""Recurrent cells: sequence form == step form; chunk-size invariance;
+state carry across calls (the contract the decode path relies on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import recurrent as rec
+
+
+def test_rglru_state_carry():
+    """Running [S1 | S2] in two calls == one call over S1+S2."""
+    d, w, B = 16, 16, 2
+    params = rec.init_rglru(jax.random.PRNGKey(0), d, w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 12, d))
+    full, _ = rec.rglru_block(params, x, width=w)
+    st = rec.init_rglru_state(B, w)
+    o1, st = rec.rglru_block(params, x[:, :5], width=w, state=st)
+    o2, st = rec.rglru_block(params, x[:, 5:], width=w, state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(full), rtol=3e-3, atol=3e-3)
+
+
+def test_rglru_step_by_step():
+    d, w, B = 8, 8, 1
+    params = rec.init_rglru(jax.random.PRNGKey(0), d, w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 6, d))
+    full, _ = rec.rglru_block(params, x, width=w)
+    st = rec.init_rglru_state(B, w)
+    outs = []
+    for t in range(6):
+        o, st = rec.rglru_block(params, x[:, t:t + 1], width=w, state=st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("chunk", [2, 4, 8, 16])
+def test_mlstm_chunk_invariance(chunk):
+    B, H, S, dh = 1, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, H, S, dh)) for i in range(3))
+    i_pre = jax.random.normal(ks[3], (B, H, S))
+    f_pre = jax.random.normal(ks[4], (B, H, S)) + 2.0
+    ref, _ = rec._mlstm_seq(q, k, v, i_pre, f_pre, chunk=S)
+    out, _ = rec._mlstm_seq(q, k, v, i_pre, f_pre, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_mlstm_seq_equals_steps():
+    B, H, S, dh = 1, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, H, S, dh)) for i in range(3))
+    i_pre = jax.random.normal(ks[3], (B, H, S))
+    f_pre = jax.random.normal(ks[4], (B, H, S)) + 2.0
+    seq_out, seq_state = rec._mlstm_seq(q, k, v, i_pre, f_pre, chunk=4)
+    st = rec.init_mlstm_state(B, H, dh)
+    outs = []
+    for t in range(S):
+        h, st = rec.mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                               i_pre[:, :, t], f_pre[:, :, t], st)
+        outs.append(h)
+    step_out = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(step_out), np.asarray(seq_out),
+                               rtol=3e-3, atol=3e-3)
+    for a, b in zip(seq_state, st):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-3, atol=3e-3)
+
+
+def test_slstm_state_carry():
+    d, B = 8, 2
+    params = rec.init_slstm(jax.random.PRNGKey(0), d, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 10, d))
+    full, _ = rec.slstm_block(params, x)
+    st = rec.init_slstm_state(B, d)
+    o1, st = rec.slstm_block(params, x[:, :4], state=st)
+    o2, st = rec.slstm_block(params, x[:, 4:], state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(full), rtol=3e-3, atol=3e-3)
+
+
+def test_rglru_long_context_stability():
+    """Bounded state: no blowup over a long roll (the long_500k property)."""
+    d, w, B = 8, 8, 1
+    params = rec.init_rglru(jax.random.PRNGKey(0), d, w)
+    st = rec.init_rglru_state(B, w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 64, d))
+    for _ in range(8):
+        out, st = rec.rglru_block(params, x, width=w, state=st)
+    assert bool(jnp.isfinite(out).all())
+    assert bool(jnp.isfinite(st["h"]).all())
+    assert float(jnp.abs(st["h"]).max()) < 1e3

@@ -1,0 +1,52 @@
+"""Batched serving engine: shapes, determinism, and left-pad handling."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(cfg, params, max_batch=4, max_seq=64)
+
+
+def _reqs(n, seed=0, new=6):
+    rng = np.random.RandomState(seed)
+    return [Request(prompt=rng.randint(0, 512, size=rng.randint(3, 12))
+                    .astype(np.int32), max_new_tokens=new, id=i)
+            for i in range(n)]
+
+
+def test_generate_shapes(engine):
+    out = engine.generate(_reqs(6))
+    assert len(out) == 6
+    for r in out:
+        assert len(r["tokens"]) == 6
+        assert all(isinstance(t, int) for t in r["tokens"])
+
+
+def test_generate_deterministic(engine):
+    a = engine.generate(_reqs(3, seed=1))
+    b = engine.generate(_reqs(3, seed=1))
+    assert [r["tokens"] for r in a] == [r["tokens"] for r in b]
+
+
+def test_batching_invariance(engine):
+    """A request's output does not depend on its batch-mates (greedy).
+
+    Prompts share a length so left-padding is identical batched vs solo
+    (pad-token masking inside prefill is a known engine limitation, noted
+    in DESIGN.md).
+    """
+    rng = np.random.RandomState(2)
+    reqs = [Request(prompt=rng.randint(0, 512, size=8).astype(np.int32),
+                    max_new_tokens=6, id=i) for i in range(2)]
+    both = engine.generate(reqs)
+    solo = engine.generate([reqs[0]])
+    assert both[0]["tokens"] == solo[0]["tokens"]

@@ -1,0 +1,132 @@
+"""Training substrate: loss decreases, NaN guard, accumulation equivalence,
+int8 moments, error-feedback gradient compression, Bayesian mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, AttentionConfig, CompressionConfig
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw, grad_compression, schedule
+from repro.train import train_step as ts
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return ArchConfig(
+        name="tiny", num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16),
+        compression=CompressionConfig(enabled=True, block_ffn=16,
+                                      block_attn=16),
+        remat="none")
+
+
+def _run(cfg, steps=12, **kw):
+    opt = adamw.AdamWConfig(lr=3e-3, **kw.pop("opt", {}))
+    state = ts.init_state(jax.random.PRNGKey(0), cfg, opt, **{
+        k: kw[k] for k in ("compress_grads", "bayesian_mode") if k in kw})
+    step = jax.jit(ts.make_train_step(cfg, opt, **kw), donate_argnums=(0,))
+    data = SyntheticLM(cfg, batch=4, seq=32, seed=0)
+    losses = []
+    for i in range(steps):
+        state, m = step(state, data(i))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_loss_decreases(tiny_cfg):
+    _, losses = _run(tiny_cfg, steps=15)
+    assert losses[-1] < losses[0] - 0.1, losses
+    assert np.isfinite(losses).all()
+
+
+def test_loss_decreases_dense_baseline(tiny_cfg):
+    cfg = tiny_cfg.replace(compression=CompressionConfig(enabled=False))
+    _, losses = _run(cfg, steps=15)
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_nan_guard_skips_bad_step(tiny_cfg):
+    opt = adamw.AdamWConfig(lr=1e-3)
+    state = ts.init_state(jax.random.PRNGKey(0), tiny_cfg, opt)
+    step = jax.jit(ts.make_train_step(tiny_cfg, opt))
+    data = SyntheticLM(tiny_cfg, batch=2, seq=16, seed=0)
+    batch = data(0)
+    params_before = jax.tree.map(lambda x: np.asarray(x), state["params"])
+    bad = dict(batch)
+    # poison the frontend-free path via labels out of range? use huge tokens
+    # -> instead poison params is invasive; feed NaNs through a float input:
+    state2, m = step(state, bad)
+    # craft a genuinely NaN loss by scaling embed table to inf
+    state_inf = dict(state2)
+    state_inf["params"] = jax.tree.map(lambda x: x, state2["params"])
+    inf_tab = state_inf["params"]["embed"]["table"] * jnp.inf
+    state_inf["params"] = {**state_inf["params"],
+                           "embed": {"table": inf_tab}}
+    state3, m3 = step(state_inf, data(1))
+    assert int(m3["ok"]) == 0
+    assert int(state3["skipped"]) >= 1
+    # params unchanged on the skipped step (still inf -> equal to input)
+    assert bool(jnp.isinf(state3["params"]["embed"]["table"]).any())
+
+
+def test_grad_accumulation_matches_full_batch(tiny_cfg):
+    opt = adamw.AdamWConfig(lr=1e-3, grad_clip=0.0)
+    data = SyntheticLM(tiny_cfg, batch=8, seq=16, seed=3)
+    batch = data(0)
+    s1 = ts.init_state(jax.random.PRNGKey(0), tiny_cfg, opt)
+    s2 = jax.tree.map(lambda x: x, s1)
+    step1 = jax.jit(ts.make_train_step(tiny_cfg, opt, accum=1))
+    step4 = jax.jit(ts.make_train_step(tiny_cfg, opt, accum=4))
+    s1, m1 = step1(s1, batch)
+    s2, m4 = step4(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+    l1 = jax.tree.leaves(s1["params"])
+    l2 = jax.tree.leaves(s2["params"])
+    for a, b in zip(l1, l2):
+        # f32 summation-order noise through Adam's rsqrt where v ~ 0 gives a
+        # few outliers; the update direction must match everywhere else
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=3e-3)
+
+
+def test_int8_moments_track_fp32(tiny_cfg):
+    _, losses_q = _run(tiny_cfg, steps=12, opt={"quantize_moments": True})
+    _, losses_f = _run(tiny_cfg, steps=12)
+    assert losses_q[-1] < losses_q[0] - 0.05
+    # quantized run stays within a loose band of the fp32 run
+    assert abs(losses_q[-1] - losses_f[-1]) < 1.0
+
+
+def test_grad_compression_error_feedback(tiny_cfg):
+    _, losses = _run(tiny_cfg, steps=12, compress_grads=True)
+    assert losses[-1] < losses[0] - 0.05
+
+
+def test_grad_compression_unbiased_over_steps():
+    """EF property: accumulated quantization error stays bounded."""
+    g = {"w": jnp.linspace(-1, 1, 1024).reshape(32, 32)}
+    ef = grad_compression.init_error_feedback(g)
+    total_deq = jnp.zeros_like(g["w"])
+    for i in range(16):
+        deq, ef = grad_compression.compress_decompress(g, ef)
+        total_deq = total_deq + deq["w"]
+    np.testing.assert_allclose(np.asarray(total_deq) / 16,
+                               np.asarray(g["w"]), atol=2e-3)
+
+
+def test_bayesian_mode_trains(tiny_cfg):
+    state, losses = _run(tiny_cfg, steps=10, bayesian_mode=True)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    leaf = state["params"]["embed"]["table"]
+    assert set(leaf.keys()) == {"mu", "rho"}
+
+
+def test_schedule_shapes():
+    s = schedule.warmup_cosine(jnp.arange(100), peak_lr=1e-3,
+                               warmup_steps=10, total_steps=100)
+    assert float(s[0]) == 0.0
+    assert float(s[10]) == pytest.approx(1e-3, rel=1e-5)
+    assert float(s[99]) < 3e-4
