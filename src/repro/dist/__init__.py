@@ -1,0 +1,8 @@
+"""Distribution subsystem: GSPMD sharding rules + activation-sharding context.
+
+``sharding`` derives PartitionSpecs from parameter path + shape (the rule
+engine); ``ctx`` carries the activation policy that models consult at block
+boundaries.  Nothing here touches jax device state at import time — the
+dry-run must be able to set XLA_FLAGS before first init.
+"""
+from . import ctx, sharding  # noqa: F401

@@ -1,0 +1,70 @@
+"""Activation-sharding context: the policy models consult at block boundaries.
+
+``activation_policy(mesh, seq_shard=...)`` installs a policy for the current
+thread; ``shard_act(x)`` — called by the model backbones between blocks — pins
+``(B, S, d)`` activations to the policy's layout via
+``with_sharding_constraint``.  Outside any policy it is the identity, so the
+backbones run unchanged on a single host device.
+
+Why a context instead of plumbing a mesh through every forward signature: the
+block stack is traversed by ``lax.scan`` / ``jax.checkpoint`` closures several
+layers deep; a dynamically-scoped policy keeps the model code free of
+distribution concerns (the same pattern as jax's own mesh context manager).
+The policy is captured at TRACE time, so jit the step functions inside the
+context (the launchers and the serve engine both do).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from . import sharding as sh
+
+
+class _PolicyState(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_STATE = _PolicyState()
+
+
+@contextlib.contextmanager
+def activation_policy(mesh, *, seq_shard: bool = False):
+    """Install an activation-sharding policy: batch over the DP axes, and —
+    when ``seq_shard`` (token parallelism) — sequence over "model".
+    Policies nest; the innermost wins.
+    """
+    _STATE.stack.append((mesh, bool(seq_shard)))
+    try:
+        yield
+    finally:
+        _STATE.stack.pop()
+
+
+def current_policy() -> Optional[Tuple[object, bool]]:
+    """The innermost (mesh, seq_shard) policy, or None outside any context."""
+    return _STATE.stack[-1] if _STATE.stack else None
+
+
+def shard_act(x):
+    """Block-boundary sharding pin for a (B, S, d) activation.
+
+    A no-op without an active policy or for non-rank-3 values.  With one, the
+    constraint re-anchors GSPMD's propagation each block — without the pin the
+    partitioner is free to drift layouts mid-stack (measured as spurious
+    all-gathers on the 256-chip dry-run), and under token parallelism it is
+    what actually holds the sequence dim on "model" between attention's
+    all-to-alls.  Divisibility is re-checked against the live shape, so
+    microbatched (B/accum) slices inside the accumulation scan pin correctly.
+    """
+    pol = current_policy()
+    if pol is None or getattr(x, "ndim", None) != 3:
+        return x
+    mesh, seq_shard = pol
+    spec = sh.batch_spec(x.shape, mesh, x.shape[0], seq_shard=seq_shard)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,364 @@
+"""Mesh-aware sharding rule engine for the 256/512-chip production meshes.
+
+Derives ``jax.sharding.PartitionSpec``s from *parameter path + shape* (plus a
+mesh and a named strategy), so models never hard-code a layout.  The engine
+only needs duck-typed mesh info (``axis_names`` + ``devices.shape``), which
+lets rule derivation run with zero devices (tests, planning tools).
+
+Mesh axes (launch/mesh.py):
+  ``("data", "model")`` single pod, ``("pod", "data", "model")`` multi-pod.
+  DP/FSDP run over ("pod","data"); TP/EP/SP over "model".
+
+Rule table (see docs/sharding.md for the narrative version):
+
+  path pattern                 shape            spec (strategy="2d")
+  ---------------------------  ---------------  --------------------------------
+  */{q,k,v,up,gate,...}/w      (in, out)        P(None, ("model","data"))  column
+  */{o,down,out}/w             (in, out)        P("model", "data")         row
+  */{q,k,v,up,gate,...}/wc     (p, q, k)        P("model", None, "data")   column
+  */{o,down,out}/wc            (p, q, k)        P(None, "model", "data")   row
+  */experts/{up,gate,down}     (E, ...)         E over "model" (EP) when
+                                                divisible, else TP inside the
+                                                expert on the block dims
+  embed/table                  (V, d)           P(("model","data"), None)
+  norm scales / biases / 1-d   (d,)             P()  (replicated)
+  stacked/scanned leading dim  (L, ...)         leading dim never sharded
+
+Every placement is guarded by divisibility (a dim is only sharded when the
+axis-size product divides it; otherwise the rule falls back down a preference
+chain and ultimately replicates), and by RULE ZERO, enforced centrally in
+``_derive``: a contraction dimension is NEVER sharded over a data-parallel
+axis — that would turn the per-shard matmul into a partial sum over the batch
+axis, silently corrupting data parallelism.  TP contractions over "model" are
+fine (that is Megatron row parallelism: partial sums + one all-reduce).
+
+Strategies:
+  "2d" (alias "megatron")  TP over "model" + FSDP over "data" as above.
+  "tokenpar"               weights replicate over "model" (FSDP over "data"
+                           only); "model" is reserved for sequence/token
+                           parallelism of activations (``batch_spec`` with
+                           ``seq_shard=True``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Data-parallel axes in nesting order; "pod" only exists on the 512-chip mesh.
+DP_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+# pytree roots whose children carry a stacked/scanned leading dim (params are
+# jnp.stack'ed over the scan axis — that dim is structural, never sharded).
+STACKED_ROOTS = frozenset({"segments", "enc_blocks", "dec_blocks"})
+
+# Linear names whose *input* dim is the TP-sharded contraction (row parallel).
+ROW_LINEAR = frozenset({"o", "down", "out"})
+
+# Leaves that always replicate regardless of shape (tiny position tables).
+REPLICATED_LEAVES = frozenset({"pos"})
+
+# Canonical core ranks per leaf kind: extra leading dims are stack dims.
+_CORE_RANK = {"wc": 3, "w": 2, "table": 2}
+
+STRATEGIES = {"2d": "2d", "megatron": "2d", "tokenpar": "tokenpar"}
+
+
+# ---------------------------------------------------------------------------
+# Mesh introspection (duck-typed: works on jax.sharding.Mesh and on fakes)
+# ---------------------------------------------------------------------------
+def axis_sizes(mesh) -> Dict[str, int]:
+    """``{axis_name: size}`` from anything with ``axis_names`` + ``devices``."""
+    return {str(n): int(s)
+            for n, s in zip(tuple(mesh.axis_names), np.shape(mesh.devices))}
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present on this mesh, outermost first."""
+    sizes = axis_sizes(mesh)
+    return tuple(a for a in DP_AXES if a in sizes)
+
+
+def _prod(vals) -> int:
+    out = 1
+    for v in vals:
+        out *= int(v)
+    return out
+
+
+def _canon_strategy(strategy: str) -> str:
+    try:
+        return STRATEGIES[strategy]
+    except KeyError:
+        raise ValueError(f"unknown sharding strategy {strategy!r}; "
+                         f"known: {sorted(set(STRATEGIES))}") from None
+
+
+# ---------------------------------------------------------------------------
+# Placement engine
+# ---------------------------------------------------------------------------
+class _Placer:
+    """Greedy axis placement with divisibility + single-use enforcement.
+
+    ``place(axis, dim_prefs)`` walks the preference list and assigns ``axis``
+    to the first dim whose size is divisible by the product of the axes
+    already on that dim times ``axis``'s size.  An axis is used at most once
+    across the whole spec; failure to place simply replicates (the
+    "replicate-on-indivisible" rule).
+    """
+
+    def __init__(self, shape: Sequence[int], sizes: Dict[str, int]):
+        self.shape = tuple(int(s) for s in shape)
+        self.sizes = sizes
+        self.dims: List[List[str]] = [[] for _ in self.shape]
+        self.used: set = set()
+
+    def place(self, axis: str, dim_prefs: Sequence[int]) -> Optional[int]:
+        if axis not in self.sizes or axis in self.used:
+            return None
+        for d in dim_prefs:
+            if d < 0 or d >= len(self.shape):
+                continue
+            need = _prod(self.sizes[a] for a in self.dims[d])
+            need *= self.sizes[axis]
+            if self.shape[d] > 0 and self.shape[d] % need == 0:
+                self.dims[d].append(axis)
+                self.used.add(axis)
+                return d
+        return None
+
+    def entries(self) -> List[Any]:
+        out: List[Any] = []
+        for axes in self.dims:
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(tuple(axes))
+        return out
+
+
+def _derive(shape, sizes, plan, contraction_dims) -> P:
+    """Run a placement plan and build the spec.  RULE ZERO lives HERE: any
+    data-parallel axis that a plan tried to put on a contraction dim is
+    stripped before the spec is built — no individual rule can override it.
+    """
+    placer = _Placer(shape, sizes)
+    for axis, dim_prefs in plan:
+        safe = [d for d in dim_prefs
+                if not (axis in DP_AXES and d in contraction_dims)]
+        placer.place(axis, safe)
+    for d in contraction_dims:                   # central backstop
+        if 0 <= d < len(placer.dims):
+            placer.dims[d] = [a for a in placer.dims[d] if a not in DP_AXES]
+    return P(*placer.entries())
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def _linear_name(path: Tuple[str, ...]) -> str:
+    leaf = path[-1]
+    if leaf in ("w", "wc", "b") and len(path) >= 2:
+        return path[-2]
+    return leaf
+
+
+def _param_core_spec(path, core, sizes, strategy) -> P:
+    """Spec for the unstacked core shape of one parameter leaf."""
+    leaf = path[-1]
+    row = _linear_name(path) in ROW_LINEAR
+    tp = strategy != "tokenpar"                  # tokenpar replicates weights
+                                                 # over the model axis
+
+    if leaf == "table":                          # embedding / tied LM head:
+        plan = []                                # vocab over model (+FSDP)
+        if tp:
+            plan.append((MODEL_AXIS, [0]))
+        plan.extend((a, [0]) for a in DP_AXES)
+        return _derive(core, sizes, plan, contraction_dims=())
+
+    if "experts" in path:                        # (E, ...) per-expert stacks
+        nd = len(core)
+        if nd == 4:                              # circulant (E, p, q, k)
+            e_dim, p_dim, q_dim, k_dim = 0, 1, 2, 3
+        elif nd == 3:                            # dense (E, n_in, n_out)
+            e_dim, p_dim, q_dim, k_dim = 0, 2, 1, -1
+        else:                                    # router-ish oddity: replicate
+            return P()
+        contraction = (q_dim,)
+        # EP when E divides the model axis; else TP inside the expert.
+        intra = [q_dim, k_dim] if row else [p_dim, k_dim]
+        plan = []
+        if tp:
+            plan.append((MODEL_AXIS, [e_dim] + intra))
+        plan.extend((a, [k_dim, p_dim]) for a in DP_AXES)
+        return _derive(core, sizes, plan, contraction_dims=contraction)
+
+    if leaf == "wc" and len(core) == 3:          # block-circulant (p, q, k)
+        contraction = (1,)                       # q = input (contraction) blocks
+        model_pref = [1, 2] if row else [0, 2]
+        plan = []
+        if tp:
+            plan.append((MODEL_AXIS, model_pref))
+        plan.extend((a, [2, 0]) for a in DP_AXES)
+        return _derive(core, sizes, plan, contraction_dims=contraction)
+
+    if len(core) == 2:                           # dense (n_in, n_out)
+        contraction = (0,)
+        model_pref = [0, 1] if row else [1]
+        plan = []
+        if tp:
+            plan.append((MODEL_AXIS, model_pref))
+        plan.extend((a, [1]) for a in DP_AXES)
+        return _derive(core, sizes, plan, contraction_dims=contraction)
+
+    # Unclassified multi-dim leaf: replicate (correct, never wrong — the
+    # hill-climb loop promotes hot ones into explicit rules).
+    return P()
+
+
+def param_spec(path: Sequence[Any], shape: Sequence[int], mesh,
+               strategy: str = "2d") -> P:
+    """PartitionSpec for one parameter from its pytree path + shape.
+
+    ``path`` is a tuple of pytree keys (strings or indices); ``shape`` the
+    leaf shape.  Stacked/scanned leading dims (params under ``segments`` /
+    ``enc_blocks`` / ``dec_blocks``) are detected and never sharded.
+    """
+    strategy = _canon_strategy(strategy)
+    path = tuple(str(c) for c in path)
+    shape = tuple(int(s) for s in shape)
+    sizes = axis_sizes(mesh)
+    leaf = path[-1] if path else ""
+
+    if leaf in REPLICATED_LEAVES:
+        return P()
+
+    n_stack = 1 if (path and STACKED_ROOTS.intersection(path)) else 0
+    if leaf in _CORE_RANK:                       # rank-derived stack count
+        n_stack = max(n_stack, len(shape) - _CORE_RANK[leaf])
+    n_stack = min(n_stack, len(shape))
+    core = shape[n_stack:]
+
+    if len(core) <= 1:                           # scalars, norms, biases
+        return P()
+
+    spec = _param_core_spec(path, core, sizes, strategy)
+    if n_stack == 0:
+        return spec
+    return P(*([None] * n_stack), *tuple(spec))
+
+
+def param_specs(params, mesh, strategy: str = "2d"):
+    """``param_spec`` mapped over a parameter pytree (shapes or arrays)."""
+    def one(key_path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in key_path)
+        return param_spec(names, getattr(leaf, "shape", ()), mesh, strategy)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(shape: Sequence[int], mesh, global_batch: int,
+               seq_shard: bool = False) -> P:
+    """Spec for a batch-leading activation or input: batch dim over the DP
+    axes (as a tuple, so 256- and 512-chip meshes read uniformly), optional
+    sequence dim over "model" (token parallelism), replicate-on-indivisible.
+    Dim 0 is only treated as the batch dim when it equals ``global_batch``
+    (pass the leaf's own leading size for microbatched slices).
+    """
+    shape = tuple(int(s) for s in shape)
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    entries: List[Any] = [None] * len(shape)
+    if (shape and dpa and shape[0] == int(global_batch)
+            and shape[0] % _prod(sizes[a] for a in dpa) == 0):
+        entries[0] = tuple(dpa)
+    if (seq_shard and len(shape) >= 2 and MODEL_AXIS in sizes
+            and shape[1] % sizes[MODEL_AXIS] == 0):
+        entries[1] = MODEL_AXIS
+    return P(*entries)
+
+
+def batch_specs(batch, mesh, global_batch: int, seq_shard: bool = False):
+    """``batch_spec`` mapped over a batch pytree (tokens/labels/frames/...)."""
+    return jax.tree.map(
+        lambda leaf: batch_spec(getattr(leaf, "shape", ()), mesh,
+                                global_batch, seq_shard=seq_shard),
+        batch)
+
+
+def cache_spec(path: Sequence[Any], shape: Sequence[int], dtype, mesh,
+               global_batch: int) -> P:
+    """Spec for one KV-cache / recurrent-state leaf.
+
+    Integer leaves (ring positions, counters) replicate.  Float leaves shard
+    their batch dim (first dim equal to ``global_batch``) over the DP axes;
+    KV-shaped leaves ``(..., B, S, H, D)`` additionally put "model" on the
+    heads dim when divisible, falling back to head_dim (GQA archs have too
+    few KV heads for a 16-way model axis).  The sequence dim is NEVER sharded
+    — decode writes single slots at dynamic positions.
+    """
+    shape = tuple(int(s) for s in shape)
+    if np.issubdtype(np.dtype(dtype), np.integer) or not shape:
+        return P()
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    b_idx = next((i for i, s in enumerate(shape) if s == int(global_batch)),
+                 None)
+    if b_idx is None:
+        return P()
+    entries: List[Any] = [None] * len(shape)
+    if dpa and shape[b_idx] % _prod(sizes[a] for a in dpa) == 0:
+        entries[b_idx] = tuple(dpa)
+    m = sizes.get(MODEL_AXIS)
+    if m and len(shape) >= b_idx + 3:            # (..., B, S, H, D)-like tail
+        if len(shape) - 2 > b_idx and shape[-2] % m == 0:
+            entries[-2] = MODEL_AXIS
+        elif shape[-1] % m == 0:
+            entries[-1] = MODEL_AXIS
+    return P(*entries)
+
+
+def cache_specs(cache, mesh, global_batch: int):
+    """``cache_spec`` mapped over a cache pytree (with paths for dispatch)."""
+    def one(key_path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in key_path)
+        return cache_spec(names, getattr(leaf, "shape", ()),
+                          getattr(leaf, "dtype", np.float32), mesh,
+                          global_batch)
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def logits_spec(mesh, global_batch: int, vocab: int) -> P:
+    """Spec for (B, S, V) logits: batch over DP, vocab over "model" (the
+    tied LM head is vocab-sharded column TP), seq replicated."""
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    b_entry = (tuple(dpa) if dpa and
+               int(global_batch) % _prod(sizes[a] for a in dpa) == 0 else None)
+    m = sizes.get(MODEL_AXIS)
+    v_entry = MODEL_AXIS if m and int(vocab) % m == 0 else None
+    return P(b_entry, None, v_entry)
+
+
+# ---------------------------------------------------------------------------
+# Mesh binding
+# ---------------------------------------------------------------------------
+def to_shardings(specs, mesh):
+    """Bind a pytree of PartitionSpecs to a concrete mesh as NamedShardings.
+
+    Needs a real ``jax.sharding.Mesh`` (this is the only function in the
+    module that does); spec derivation above never touches devices.
+    """
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -14,9 +14,24 @@ the layout that scales past 1000 nodes.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Optional, Tuple
 
 import jax
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types=Auto`` where the jax version supports it.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types`` kwarg on
+    ``jax.make_mesh``) only exist on newer jax; older versions are
+    Auto-by-default, so omitting the kwarg is behavior-identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if (axis_type is None or
+            "axis_types" not in inspect.signature(jax.make_mesh).parameters):
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,15 +45,13 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for the production mesh, have {len(devices)} "
             "(the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 before any jax import)")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh with GSPMD-auto axis types (tests use small meshes)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():

@@ -15,8 +15,10 @@ import jax
 
 from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
 from ..data.pipeline import SyntheticLM
+from ..dist import ctx as dist_ctx
 from ..optim import adamw
 from ..train.trainer import Trainer
+from . import mesh as mesh_lib
 
 
 def main():
@@ -45,7 +47,10 @@ def main():
         workdir=args.workdir, data_fn=data, total_steps=args.steps,
         ckpt_every=max(args.steps // 2, 1), log_every=10, accum=args.accum,
         compress_grads=args.compress_grads, bayesian_mode=args.bayesian)
-    state = trainer.run()
+    # The step jit traces lazily (first call inside run()), so installing the
+    # activation policy here pins block-boundary activations for the whole run.
+    with dist_ctx.activation_policy(mesh_lib.make_host_mesh()):
+        state = trainer.run()
     n = sum(p.size for p in jax.tree.leaves(state["params"]))
     print(f"[launch.train] {args.arch}: {int(state['step'])} steps, "
           f"{n:,} params, loss {trainer.history[-1]['loss']:.4f}")

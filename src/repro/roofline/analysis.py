@@ -44,6 +44,38 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    Older jax returns a one-element list of per-program dicts (multi-program
+    executables return several — summed here, matching the newer flat-dict
+    semantics); newer jax returns the dict directly.  Idempotent.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for prog in ca:
+            for k, v in (prog or {}).items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return dict(ca or {})
+
+
+class CompiledCompat:
+    """Delegating view of a compiled executable whose ``cost_analysis()`` is
+    normalized via ``xla_cost_analysis`` — so downstream report code (and
+    EXPERIMENTS.md numbers) can always index ``["flops"]``."""
+
+    def __init__(self, compiled):
+        self._compiled = compiled
+
+    def __getattr__(self, name):
+        return getattr(self._compiled, name)
+
+    def cost_analysis(self) -> Dict[str, float]:
+        return xla_cost_analysis(self._compiled)
+
+
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute", "collective-broadcast")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
@@ -196,7 +228,7 @@ def cell_report(lowered, compiled, cfg: ArchConfig, shape: ShapeSpec,
     chips = int(np.prod(mesh.devices.shape))
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp_size = sizes.get("pod", 1) * sizes.get("data", 1)
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     slstm_extra = (slstm_scan_correction(cfg, shape, dp_size)
                    if cfg.unroll_scan else 0.0)
     flops = float(ca.get("flops", 0.0)) + slstm_extra

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..dist import ctx as dist_ctx
+from ..launch import mesh as mesh_lib
 from ..models.registry import build_model
 from . import decode as dec
 
@@ -30,12 +32,15 @@ class Request:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 max_seq: int = 256, sample: bool = False):
+                 max_seq: int = 256, sample: bool = False, mesh=None):
         self.cfg = cfg
         self.params = params
         self.model = build_model(cfg)
         self.max_batch = max_batch
         self.max_seq = max_seq
+        # Activations are pinned through the same policy the production
+        # dry-run uses; default is this host's (n, 1) data-parallel mesh.
+        self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh()
         self._prefill = jax.jit(dec.make_prefill_step(cfg))
         self._decode = jax.jit(dec.make_decode_step(cfg, sample=sample),
                                donate_argnums=(2,))
@@ -63,6 +68,10 @@ class Engine:
         return out
 
     def _generate_batch(self, reqs: Sequence[Request]) -> List[Dict]:
+        with dist_ctx.activation_policy(self.mesh):
+            return self._generate_batch_inner(reqs)
+
+    def _generate_batch_inner(self, reqs: Sequence[Request]) -> List[Dict]:
         t0 = time.time()
         batch = self._make_batch(reqs)
         B, S = batch["tokens"].shape

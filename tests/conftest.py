@@ -1,6 +1,17 @@
 """Shared test config.  NOTE: no XLA_FLAGS here by design — smoke tests and
 benchmarks must see the real single CPU device; only the dry-run (and the
 subprocess-based sharding tests) force a 512/8-device host platform."""
+import os
+import sys
+
+# Path shim: the suite runs against an installed `repro` (pip install -e .)
+# OR straight from a checkout via the tier-1 `PYTHONPATH=src` invocation —
+# and, with this shim, from a bare checkout with neither.
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import jax
 import pytest
 

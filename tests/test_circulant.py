@@ -12,7 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is an optional (test-extra) dependency: without it only the two
+# property-based tests skip — the unit tests below still run everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade gracefully (pip install -e .[test] for full run)
+    HAVE_HYPOTHESIS = False
 
 from repro.core import circulant as cc
 
@@ -105,34 +112,39 @@ def test_gradient_is_first_row_only():
 
 
 # ---------------------------------------------------------------------------
-# Property-based invariants
+# Property-based invariants (skipped without hypothesis)
 # ---------------------------------------------------------------------------
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 6), st.integers(1, 6), st.sampled_from([2, 4, 8, 16]),
-       st.integers(0, 2 ** 31 - 1))
-def test_property_matches_dense(p, q, k, seed):
-    """∀ shapes: the FFT path equals multiplication by the materialized
-    block-circulant matrix (the circulant convolution theorem)."""
-    n_in, n_out = q * k, p * k
-    w = cc.init_block_circulant(jax.random.PRNGKey(seed), n_in, n_out, k)
-    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n_in))
-    yd = cc.bc_matmul_direct(x, w, n_out)
-    yf = cc.bc_matmul_fft(x, w, n_out)
-    np.testing.assert_allclose(yd, yf, rtol=5e-3, atol=5e-3)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 6), st.sampled_from([2, 4, 8, 16]),
+           st.integers(0, 2 ** 31 - 1))
+    def test_property_matches_dense(p, q, k, seed):
+        """∀ shapes: the FFT path equals multiplication by the materialized
+        block-circulant matrix (the circulant convolution theorem)."""
+        n_in, n_out = q * k, p * k
+        w = cc.init_block_circulant(jax.random.PRNGKey(seed), n_in, n_out, k)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n_in))
+        yd = cc.bc_matmul_direct(x, w, n_out)
+        yf = cc.bc_matmul_fft(x, w, n_out)
+        np.testing.assert_allclose(yd, yf, rtol=5e-3, atol=5e-3)
 
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 64), st.integers(1, 64), st.sampled_from([4, 8, 16]))
-def test_property_linearity(a, b, k):
-    """Linearity in both arguments (exercises zero-padding correctness)."""
-    n_in, n_out = max(a, 1), max(b, 1)
-    w = cc.init_block_circulant(jax.random.PRNGKey(0), n_in, n_out, k)
-    x1 = jax.random.normal(jax.random.PRNGKey(1), (3, n_in))
-    x2 = jax.random.normal(jax.random.PRNGKey(2), (3, n_in))
-    y = cc.bc_matmul_fft(x1 + 2.0 * x2, w, n_out)
-    y12 = (cc.bc_matmul_fft(x1, w, n_out) +
-           2.0 * cc.bc_matmul_fft(x2, w, n_out))
-    np.testing.assert_allclose(y, y12, rtol=5e-3, atol=5e-3)
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 64), st.sampled_from([4, 8, 16]))
+    def test_property_linearity(a, b, k):
+        """Linearity in both arguments (exercises zero-padding correctness)."""
+        n_in, n_out = max(a, 1), max(b, 1)
+        w = cc.init_block_circulant(jax.random.PRNGKey(0), n_in, n_out, k)
+        x1 = jax.random.normal(jax.random.PRNGKey(1), (3, n_in))
+        x2 = jax.random.normal(jax.random.PRNGKey(2), (3, n_in))
+        y = cc.bc_matmul_fft(x1 + 2.0 * x2, w, n_out)
+        y12 = (cc.bc_matmul_fft(x1, w, n_out) +
+               2.0 * cc.bc_matmul_fft(x2, w, n_out))
+        np.testing.assert_allclose(y, y12, rtol=5e-3, atol=5e-3)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -e .[test])")
+    def test_property_invariants():
+        pass
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,175 @@
+"""Property tests for the sharding rule engine's invariants.
+
+Three invariants hold for EVERY derived spec, whatever the path/shape/mesh:
+
+  I1  every axis in a spec exists on the mesh, and is used at most once;
+  I2  divisibility — each sharded dim is divisible by the product of the
+      sizes of the axes on it (GSPMD would otherwise pad or error);
+  I3  RULE ZERO — a contraction dim never carries a data-parallel axis.
+
+A deterministic randomized sweep (numpy PRNG) always runs, so the invariants
+are exercised even where hypothesis is absent; with hypothesis installed the
+same properties run again under its shrinking search.
+"""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as sh
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.devices = np.zeros(shape)
+        self.axis_names = names
+
+
+MESHES = [
+    FakeMesh((16, 16), ("data", "model")),
+    FakeMesh((2, 16, 16), ("pod", "data", "model")),
+    FakeMesh((2, 4), ("data", "model")),
+    FakeMesh((3, 5), ("data", "model")),
+    FakeMesh((4, 2, 8), ("pod", "data", "model")),
+    FakeMesh((1, 1), ("data", "model")),
+]
+
+# (path template, core rank, contraction dims relative to the core).
+# Mirrors docs/sharding.md: dense contracts n_in (dim 0), circulant contracts
+# the input-block dim q (dim 1), experts contract inside the (E, ...) stack.
+PARAM_KINDS = [
+    (("attn", "q", "w"), 2, (0,)),
+    (("attn", "o", "w"), 2, (0,)),
+    (("mlp", "up", "wc"), 3, (1,)),
+    (("mlp", "down", "wc"), 3, (1,)),
+    (("segments", "0", "attn", "k", "w"), 2, (0,)),
+    (("segments", "0", "mlp", "gate", "wc"), 3, (1,)),
+    (("segments", "0", "moe", "experts", "up"), 4, (2,)),
+    (("segments", "0", "moe", "experts", "down"), 4, (2,)),
+    (("segments", "0", "moe", "experts", "up"), 3, (1,)),
+    (("embed", "table"), 2, ()),
+    (("ln1", "scale"), 1, ()),
+    (("pos",), 2, ()),
+]
+
+_DIM_POOL = (1, 2, 3, 4, 5, 8, 10, 16, 30, 32, 44, 64, 112, 128,
+             160, 256, 1000, 4050, 4096)
+
+
+def _axes_of(entry):
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def check_param_invariants(path, shape, mesh, strategy, contraction,
+                           core_rank):
+    """Assert I1-I3 for one derived spec.  ``contraction`` dims are relative
+    to the core — the trailing ``core_rank`` dims after any stacked leading
+    dim.  A spec shorter than the shape replicates the remaining dims, which
+    satisfies every invariant trivially.
+    """
+    spec = sh.param_spec(path, shape, mesh, strategy)
+    sizes = sh.axis_sizes(mesh)
+    assert len(spec) <= len(shape), (spec, shape)
+    used = []
+    for dim, entry in enumerate(spec):          # specs are left-aligned
+        axes = _axes_of(entry)
+        used.extend(axes)
+        for a in axes:
+            assert a in sizes, f"{a} not a mesh axis ({path}, {shape})"
+        prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        assert shape[dim] % prod == 0, (path, shape, spec, dim)        # I2
+    assert len(used) == len(set(used)), (path, shape, spec)            # I1
+    for cdim in contraction:                                           # I3
+        spec_idx = len(shape) - core_rank + cdim
+        if 0 <= spec_idx < len(spec):
+            for a in _axes_of(spec[spec_idx]):
+                assert a not in sh.DP_AXES, \
+                    f"RULE ZERO violated: {path} {shape} -> {spec}"
+    if strategy == "tokenpar":
+        assert sh.MODEL_AXIS not in used, (path, shape, spec)
+    return spec
+
+
+def _random_case(rng):
+    tmpl, core_rank, contraction = PARAM_KINDS[rng.randint(len(PARAM_KINDS))]
+    n_stack = 1 if "segments" in tmpl else 0
+    shape = tuple(int(_DIM_POOL[rng.randint(len(_DIM_POOL))])
+                  for _ in range(n_stack + core_rank))
+    mesh = MESHES[rng.randint(len(MESHES))]
+    strategy = ("2d", "megatron", "tokenpar")[rng.randint(3)]
+    return tmpl, shape, mesh, strategy, contraction, core_rank
+
+
+def test_param_spec_invariants_randomized_sweep():
+    rng = np.random.RandomState(0)
+    for _ in range(2000):
+        path, shape, mesh, strategy, contraction, core_rank = _random_case(rng)
+        check_param_invariants(path, shape, mesh, strategy, contraction,
+                               core_rank)
+
+
+def test_batch_and_cache_spec_invariants_randomized_sweep():
+    rng = np.random.RandomState(1)
+    for _ in range(1000):
+        mesh = MESHES[rng.randint(len(MESHES))]
+        sizes = sh.axis_sizes(mesh)
+        nd = rng.randint(2, 6)
+        shape = tuple(int(_DIM_POOL[rng.randint(len(_DIM_POOL))])
+                      for _ in range(nd))
+        spec = sh.batch_spec(shape, mesh, shape[0],
+                             seq_shard=bool(rng.randint(2)))
+        assert len(spec) == len(shape)
+        for dim, entry in enumerate(spec):
+            axes = _axes_of(entry)
+            prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            assert shape[dim] % prod == 0, (shape, spec)
+        # cache: ints always replicate; float specs obey divisibility
+        assert sh.cache_spec(("pos",), shape, np.int32, mesh, shape[0]) == P()
+        cspec = sh.cache_spec(("k",), (2,) + shape, np.float32, mesh, shape[0])
+        for dim, entry in enumerate(cspec):
+            axes = _axes_of(entry)
+            prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            assert ((2,) + shape)[dim] % prod == 0, (shape, cspec)
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError):
+        sh.param_spec(("attn", "q", "w"), (8, 8), MESHES[0], "diagonal")
+
+
+if HAVE_HYPOTHESIS:
+    dims = st.sampled_from(_DIM_POOL)
+
+    @settings(max_examples=300, deadline=None)
+    @given(st.integers(0, len(PARAM_KINDS) - 1),
+           st.lists(dims, min_size=5, max_size=5),
+           st.integers(0, len(MESHES) - 1),
+           st.sampled_from(["2d", "megatron", "tokenpar"]))
+    def test_param_spec_invariants_hypothesis(kind_i, dim_list, mesh_i,
+                                              strategy):
+        tmpl, core_rank, contraction = PARAM_KINDS[kind_i]
+        n_stack = 1 if "segments" in tmpl else 0
+        shape = tuple(dim_list[:n_stack + core_rank])
+        check_param_invariants(tmpl, shape, MESHES[mesh_i], strategy,
+                               contraction, core_rank)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(dims, min_size=2, max_size=5), st.integers(0, len(MESHES) - 1),
+           st.booleans())
+    def test_batch_spec_invariants_hypothesis(dim_list, mesh_i, seq_shard):
+        mesh = MESHES[mesh_i]
+        sizes = sh.axis_sizes(mesh)
+        shape = tuple(dim_list)
+        spec = sh.batch_spec(shape, mesh, shape[0], seq_shard=seq_shard)
+        assert len(spec) == len(shape)
+        for dim, entry in enumerate(spec):
+            axes = _axes_of(entry)
+            prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            assert shape[dim] % prod == 0, (shape, spec)
