@@ -21,15 +21,19 @@ def main():
     engine = Engine(cfg, params, max_batch=4, max_seq=128)
 
     rng = np.random.RandomState(0)
+    # prompts cover the smoke sliding window (16): the ring-buffer prefill
+    # keeps the window tail and needs S >= window
     reqs = [Request(prompt=rng.randint(0, cfg.vocab_size,
-                                       size=rng.randint(4, 24)).astype(np.int32),
+                                       size=rng.randint(16, 24)).astype(np.int32),
                     max_new_tokens=12, id=i) for i in range(10)]
     t0 = time.time()
     results = engine.generate(reqs)
     dt = time.time() - t0
-    toks = sum(len(r["tokens"]) for r in results)
+    toks = sum(r["decode_len"] for r in results)
     for r in results[:4]:
-        print(f"req {r['id']}: {r['tokens']}")
+        print(f"req {r['id']}: {r['tokens']}  ({r['tokens_per_s']:.0f} tok/s,"
+              f" prefill {r['prefill_s']*1e3:.0f}ms /"
+              f" decode {r['decode_s']*1e3:.0f}ms)")
     print(f"... {len(results)} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s on 1 CPU core)")
 

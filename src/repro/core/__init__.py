@@ -3,6 +3,6 @@
 from . import bayesian, circulant, compression, conv, theory  # noqa: F401
 from .circulant import (  # noqa: F401
     LinearSpec, apply_linear, bc_matmul_direct, bc_matmul_fft,
-    bc_matmul_spectral, init_block_circulant, init_linear, materialize_dense,
-    spectral_cache,
+    bc_matmul_fused, bc_matmul_spectral, fused_spectral_cache,
+    init_block_circulant, init_linear, materialize_dense, spectral_cache,
 )

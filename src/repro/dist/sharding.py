@@ -62,8 +62,14 @@ ROW_LINEAR = frozenset({"o", "down", "out"})
 # Leaves that always replicate regardless of shape (tiny position tables).
 REPLICATED_LEAVES = frozenset({"pos"})
 
+# Spectral serving-cache planes (serve/params.py): (p, q, kf) real planes of
+# rfft(wc), living under a `*_cache` dict next to the generator they mirror —
+# they shard exactly like a `wc` of the same projection.
+SPECTRAL_PLANES = frozenset({"wr", "wi", "ws1", "ws2"})
+
 # Canonical core ranks per leaf kind: extra leading dims are stack dims.
-_CORE_RANK = {"wc": 3, "w": 2, "table": 2}
+_CORE_RANK = {"wc": 3, "w": 2, "table": 2,
+              "wr": 3, "wi": 3, "ws1": 3, "ws2": 3}
 
 STRATEGIES = {"2d": "2d", "megatron": "2d", "tokenpar": "tokenpar"}
 
@@ -166,6 +172,12 @@ def _linear_name(path: Tuple[str, ...]) -> str:
     leaf = path[-1]
     if leaf in ("w", "wc", "b") and len(path) >= 2:
         return path[-2]
+    if leaf in SPECTRAL_PLANES and len(path) >= 2:
+        parent = path[-2]
+        if parent == "wc_cache" and len(path) >= 3:
+            return path[-3]                  # e.g. o/wc_cache/wr -> "o" (row)
+        if parent.endswith("_cache"):
+            return parent[:-len("_cache")]   # qkv/upgate/up/gate/down
     return leaf
 
 
@@ -200,7 +212,10 @@ def _param_core_spec(path, core, sizes, strategy) -> P:
         plan.extend((a, [k_dim, p_dim]) for a in DP_AXES)
         return _derive(core, sizes, plan, contraction_dims=contraction)
 
-    if leaf == "wc" and len(core) == 3:          # block-circulant (p, q, k)
+    # block-circulant generators (p, q, k) and their spectral serving planes
+    # (p, q, kf) place identically: the frequency dim simply fails DP
+    # divisibility more often (kf = k/2+1 is odd) and falls back to p.
+    if (leaf == "wc" or leaf in SPECTRAL_PLANES) and len(core) == 3:
         contraction = (1,)                       # q = input (contraction) blocks
         model_pref = [1, 2] if row else [0, 2]
         plan = []
@@ -242,7 +257,10 @@ def param_spec(path: Sequence[Any], shape: Sequence[int], mesh,
 
     n_stack = 1 if (path and STACKED_ROOTS.intersection(path)) else 0
     if leaf in _CORE_RANK:                       # rank-derived stack count
-        n_stack = max(n_stack, len(shape) - _CORE_RANK[leaf])
+        rank = _CORE_RANK[leaf]
+        if leaf in SPECTRAL_PLANES and "experts" in path:
+            rank += 1                            # (E, p, q, kf) expert planes
+        n_stack = max(n_stack, len(shape) - rank)
     n_stack = min(n_stack, len(shape))
     core = shape[n_stack:]
 

@@ -1,5 +1,6 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
 #   spectral_matmul — the frequency-domain block-circulant MAC phase (MXU)
 #   flash_attention — online-softmax attention (causal/window/softcap/GQA)
+#   bc_fused        — the whole FFT -> MAC -> IFFT pipeline in one kernel
 # ops.py holds the jit'd dispatch wrappers; ref.py the pure-jnp oracles.
 from . import bc_fused, ops, ref  # noqa: F401

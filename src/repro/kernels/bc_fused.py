@@ -47,7 +47,7 @@ def _kernel(x_ref, wr_ref, ws1_ref, ws2_ref, cr_ref, ci_ref, dr_ref, di_ref,
 
 def bc_fused_matmul(xb: jax.Array, wr, ws1, ws2, *, k: int,
                     block_b: int = 128, block_p: int = 8,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """xb: (B, q, k) blockified input; w planes: (p, q, kf).  -> (B, p, k)."""
     B, q, _ = xb.shape
     p, _, kf = wr.shape
@@ -71,15 +71,20 @@ def bc_fused_matmul(xb: jax.Array, wr, ws1, ws2, *, k: int,
 
 
 def bc_linear_fused_kernel(x: jax.Array, w: jax.Array, n_out: int,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = False, block_b: int = 128,
+                           block_p: int = 8) -> jax.Array:
     """Drop-in for bc_matmul_spectral using the fused kernel.
 
-    x: (..., n_in); w: (p, q, k) first-row generators."""
+    x: (..., n_in); w: (p, q, k) first-row generators.  Call through
+    ``kernels.ops.bc_linear_fused`` — the REPRO_KERNELS dispatch policy
+    ('interpret'/'tpu'/'off') lives there, like the other two kernels;
+    direct callers must pass ``interpret`` explicitly (compiled Pallas is
+    the default, matching a real TPU target)."""
     p, q, k = w.shape
     lead = x.shape[:-1]
     xb = cc._blockify(x, q, k).reshape(-1, q, k).astype(jnp.float32)
     cache = cc.spectral_cache(w)
     y = bc_fused_matmul(xb, cache["wr"], cache["ws1"], cache["ws2"], k=k,
-                        interpret=interpret)
+                        block_b=block_b, block_p=block_p, interpret=interpret)
     y = y.reshape(*lead, p * k)[..., :n_out]
     return y.astype(x.dtype)

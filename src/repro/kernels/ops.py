@@ -16,6 +16,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ..core import circulant as _cc
+from . import bc_fused as _bcf
 from . import flash_attention as _fa
 from . import ref as _ref
 from . import spectral_matmul as _sm
@@ -34,6 +36,19 @@ def spectral_matmul(xr, xi, wr, ws1, ws2, mode: str | None = None):
         return _ref.spectral_matmul_ref(xr, xi, wr, wi)
     return _sm.spectral_matmul(xr, xi, wr, ws1, ws2,
                                interpret=(mode == "interpret"))
+
+
+def bc_linear_fused(x, w, n_out: int, mode: str | None = None, **block_kw):
+    """Whole three-phase block-circulant linear (DFT -> spectral MAC -> iDFT)
+    as one fused kernel; 'off' lowers the same math through the XLA
+    cached-spectral path (bit-equal contraction, separate HLO ops)."""
+    mode = mode or kernel_mode()
+    if mode == "off":
+        return _cc.bc_matmul_spectral(x, _cc.spectral_cache(w),
+                                      w.shape[-1], n_out)
+    return _bcf.bc_linear_fused_kernel(x, w, n_out,
+                                       interpret=(mode == "interpret"),
+                                       **block_kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

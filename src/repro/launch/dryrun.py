@@ -32,6 +32,7 @@ from ..models import registry as mreg  # noqa: E402
 from ..optim import adamw  # noqa: E402
 from ..roofline import analysis as roofline  # noqa: E402
 from ..serve import decode as serve_decode  # noqa: E402
+from ..serve import params as serve_params  # noqa: E402
 from ..train import train_step as ts  # noqa: E402
 from . import mesh as mesh_lib  # noqa: E402
 
@@ -115,8 +116,11 @@ def lower_cell(arch_id: str, shape_name: str, mesh, strategy: str = "megatron",
         elif shape.kind == "prefill":
             step_fn = serve_decode.make_prefill_step(cfg, logits_sharding=lsh)
             model = mreg.build_model(cfg)
+            # Serve cells lower against the production serving params: the
+            # offline spectral planes baked in (paper's offline weight FFT).
             params_shapes = jax.eval_shape(
-                lambda: model.init(jax.random.PRNGKey(0)))
+                lambda: serve_params.precompute_serving_params(
+                    model.init(jax.random.PRNGKey(0)), cfg))
             pshard = sh.to_shardings(
                 sh.param_specs(params_shapes, mesh, strategy), mesh)
             cshard = sh.to_shardings(
@@ -133,7 +137,8 @@ def lower_cell(arch_id: str, shape_name: str, mesh, strategy: str = "megatron",
             step_fn = serve_decode.make_decode_step(cfg, logits_sharding=lsh)
             model = mreg.build_model(cfg)
             params_shapes = jax.eval_shape(
-                lambda: model.init(jax.random.PRNGKey(0)))
+                lambda: serve_params.precompute_serving_params(
+                    model.init(jax.random.PRNGKey(0)), cfg))
             pshard = sh.to_shardings(
                 sh.param_specs(params_shapes, mesh, strategy), mesh)
             cshard = sh.to_shardings(

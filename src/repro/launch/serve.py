@@ -23,6 +23,14 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="early-exit the device decode loop at this token")
+    ap.add_argument("--decode-mode", default="scan",
+                    choices=["scan", "per_token"],
+                    help="device-resident loop (default) or the seed "
+                         "per-token host loop")
+    ap.add_argument("--no-precompute", action="store_true",
+                    help="skip the offline spectral-weight pass")
     args = ap.parse_args()
 
     getter = get_config if args.full else get_smoke_config
@@ -30,17 +38,24 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(cfg, params, max_batch=args.max_batch,
-                    max_seq=64 + args.new_tokens, sample=args.sample)
+                    max_seq=64 + args.new_tokens, sample=args.sample,
+                    precompute=not args.no_precompute,
+                    decode_mode=args.decode_mode, eos_id=args.eos_id)
     rng = np.random.RandomState(0)
+    # prompts cover the smoke sliding window (16): the ring-buffer prefill
+    # keeps the window tail and needs S >= window for SWA archs
     reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, size=rng.randint(
-        4, 32)).astype(np.int32), max_new_tokens=args.new_tokens, id=i)
+        16, 32)).astype(np.int32), max_new_tokens=args.new_tokens, id=i)
         for i in range(args.requests)]
     t0 = time.time()
     results = engine.generate(reqs)
     dt = time.time() - t0
-    toks = sum(len(r["tokens"]) for r in results)
+    toks = sum(r["decode_len"] for r in results)
+    pre = sum(r["prefill_s"] for r in results) / max(len(results), 1)
+    deco = sum(r["decode_s"] for r in results) / max(len(results), 1)
     print(f"[launch.serve] {args.arch}: {len(results)} requests, "
-          f"{toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s)")
+          f"{toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s; "
+          f"mean prefill {pre * 1e3:.0f}ms / decode {deco * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

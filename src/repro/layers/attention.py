@@ -178,9 +178,13 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
             and spec.kind == "block_circulant" and cross_kv is None)
     if fuse:
         from ..core.circulant import bc_matmul_fused
+        # serve: contract against the offline-FFT'd fused planes when the
+        # precompute pass baked them (serve/params.py)
+        qkv_cache = params.get("qkv_cache") if mode != "train" else None
         q, k, v = bc_matmul_fused(
             x, [params["q"]["wc"], params["k"]["wc"], params["v"]["wc"]],
-            [H * D, Hkv * D, Hkv * D], mode)
+            [H * D, Hkv * D, Hkv * D], mode, cache=qkv_cache,
+            gauss=spec.gauss)
         if "b" in params["q"]:
             q = q + params["q"]["b"].astype(q.dtype)
             k = k + params["k"]["b"].astype(k.dtype)

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.circulant import (LinearSpec, apply_linear, bc_matmul_fft,
-                              init_block_circulant, init_linear)
+                              bc_matmul_spectral, init_block_circulant,
+                              init_linear)
 
 
 def _act(name: str, x):
@@ -44,8 +45,10 @@ def mlp(params, x, *, d_ff: int, comp=None, activation="silu", mode="train"):
             and spec.kind == "block_circulant" and "gate" in params)
     if fuse:
         from ..core.circulant import bc_matmul_fused
+        upgate_cache = params.get("upgate_cache") if mode != "train" else None
         up, gate = bc_matmul_fused(
-            x, [params["up"]["wc"], params["gate"]["wc"]], [d_ff, d_ff], mode)
+            x, [params["up"]["wc"], params["gate"]["wc"]], [d_ff, d_ff], mode,
+            cache=upgate_cache, gauss=spec.gauss)
         up = _act(activation, gate) * up
     else:
         up = apply_linear(params["up"], x, spec, d_ff, mode)
@@ -88,9 +91,18 @@ def init_moe(key, d_model: int, d_ff: int, moe_cfg, comp=None):
 
 
 def _expert_ffn(experts: Dict, xe, activation: str, d_ff: int, d_model: int,
-                bc_block: int):
+                bc_block: int, mode: str = "train"):
     """xe: (E, cap, d_model) -> (E, cap, d_model), per-expert weights."""
     if bc_block:
+        if mode != "train" and "up_cache" in experts:
+            # serve: per-expert offline-FFT'd planes (serve/params.py)
+            k = bc_block
+            spec_fwd = lambda n_out: jax.vmap(
+                lambda c, x: bc_matmul_spectral(x, c, k, n_out))
+            up = spec_fwd(d_ff)(experts["up_cache"], xe)
+            gate = spec_fwd(d_ff)(experts["gate_cache"], xe)
+            h = _act(activation, gate) * up
+            return spec_fwd(d_model)(experts["down_cache"], h)
         fwd = jax.vmap(lambda w, x: bc_matmul_fft(x, w, d_ff))
         up = fwd(experts["up"], xe)
         gate = fwd(experts["gate"], xe)
@@ -140,7 +152,8 @@ def moe(params, x, *, d_ff: int, moe_cfg, comp=None, activation="silu",
 
     xe = jnp.einsum("gtd,gtec->gecd", xt, disp_t)             # (G,E,cap,d)
     xe = xe.transpose(1, 0, 2, 3).reshape(E, G * cap, d)
-    ye = _expert_ffn(params["experts"], xe, activation, d_ff, d, bc_block)
+    ye = _expert_ffn(params["experts"], xe, activation, d_ff, d, bc_block,
+                     mode)
     ye = ye.reshape(E, G, cap, d).transpose(1, 0, 2, 3)       # (G,E,cap,d)
     out = jnp.einsum("gecd,gtec->gtd", ye, comb_t)
 

@@ -1,1 +1,2 @@
-from . import decode, engine  # noqa: F401
+from . import decode, engine, params  # noqa: F401
+from .params import precompute_serving_params, strip_serving_params  # noqa: F401

@@ -1,13 +1,16 @@
-"""Serving step builders: prefill and single-token decode.
+"""Serving step builders: prefill, single-token decode, and the
+device-resident multi-token decode loop.
 
 These are the functions the dry-run lowers for the ``prefill_*`` /
 ``decode_*`` / ``long_*`` cells, and the engine jit-calls for real serving.
 The decode step donates the cache (in-place ring-buffer update — the paper's
-in-place activation memory, as XLA buffer donation).
+in-place activation memory, as XLA buffer donation).  ``make_decode_loop``
+wraps the step in a ``lax.while_loop`` so one dispatch decodes every token of
+a batch — the host round-trip per token is what dominated the seed engine.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,3 +49,58 @@ def make_decode_step(cfg: ArchConfig, sample: bool = False,
             nxt = jnp.argmax(logits[:, -1], axis=-1)
         return logits, nxt.astype(jnp.int32), new_cache
     return decode_step
+
+
+def make_decode_loop(cfg: ArchConfig, steps: int, *, sample: bool = False,
+                     temperature: float = 1.0, eos_id: Optional[int] = None,
+                     logits_sharding=None) -> Callable:
+    """Device-resident multi-token decode: one dispatch for ``steps`` tokens.
+
+    The per-token step above runs inside a ``lax.while_loop`` whose carry
+    holds (step index, token buffer, current token, cache, done mask) — the
+    cache is threaded through the loop and donated at the jit boundary, so
+    decode stays a single in-place device program instead of ``steps``
+    host-round-tripped dispatches.
+
+    Per-request lengths are honored ON DEVICE: ``lengths[i]`` freezes request
+    ``i`` after its budget (its slots hold ``eos_id``/0 and its carry token
+    stops advancing); with ``eos_id`` set, a request also freezes after
+    emitting EOS.  The loop exits EARLY once every request is done — with no
+    EOS and uniform lengths it runs the full trip and emits bit-identical
+    tokens to the per-token loop (greedy; tested per arch).
+
+    Returns ``decode_loop(params, first_tok, cache, pos0, lengths)`` ->
+    ``(tokens (B, steps) int32, cache)``; ``first_tok`` is the prefill's
+    sampled token (slot 0 of the buffer), ``pos0`` the prompt length.
+    """
+    step = make_decode_step(cfg, sample=sample, temperature=temperature,
+                            logits_sharding=logits_sharding)
+    fill = 0 if eos_id is None else int(eos_id)
+
+    def decode_loop(params, first_tok, cache, pos0, lengths):
+        B = first_tok.shape[0]
+        first = jnp.where(lengths > 0, first_tok, jnp.int32(fill))
+        buf = jnp.full((B, steps), fill, jnp.int32).at[:, 0].set(first)
+        done = lengths <= 1
+        if eos_id is not None:
+            done = done | (first_tok == eos_id)
+
+        def cond_fn(st):
+            j, _, _, _, done_ = st
+            return jnp.logical_and(j < steps, ~jnp.all(done_))
+
+        def body_fn(st):
+            j, buf_, cur, cache_, done_ = st
+            _, nxt, cache_ = step(params, cur[:, None], cache_, pos0 + j - 1)
+            tok = jnp.where(done_, jnp.int32(fill), nxt)
+            buf_ = jax.lax.dynamic_update_slice(buf_, tok[:, None], (0, j))
+            nd = done_ | (j + 1 >= lengths)
+            if eos_id is not None:
+                nd = nd | (nxt == eos_id)
+            cur = jnp.where(done_, cur, nxt)
+            return (j + 1, buf_, cur, cache_, nd)
+
+        state = (jnp.int32(1), buf, first_tok, cache, done)
+        _, buf, _, cache, _ = jax.lax.while_loop(cond_fn, body_fn, state)
+        return buf, cache
+    return decode_loop

@@ -1,10 +1,15 @@
 """Batched serving engine: continuous-batching-lite over prefill + decode.
 
 Requests are gathered into fixed-size batches (padding short prompts),
-prefilled once, then decoded step-by-step with a shared ring/linear KV cache.
-The decode step is jit'd once per (batch, cache) shape and donates the cache.
-This is the host-scale counterpart of the production serve path the dry-run
-lowers for the ``decode_*`` cells.
+prefilled once, then decoded by the DEVICE-RESIDENT loop in serve/decode.py:
+one dispatch per batch instead of one per token, with the cache donated
+through the loop.  Params are run through the offline spectral precompute
+pass (serve/params.py) at construction, so no weight FFT executes inside the
+decode program — the paper's offline-FFT'd weights, as a param-tree pass.
+
+``decode_mode="per_token"`` keeps the seed per-token host loop (the baseline
+`benchmarks/bench_decode.py` measures against, and the oracle the scanned
+loop is tested bit-identical to).
 """
 from __future__ import annotations
 
@@ -19,8 +24,10 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..dist import ctx as dist_ctx
 from ..launch import mesh as mesh_lib
+from ..models import transformer as tfm
 from ..models.registry import build_model
 from . import decode as dec
+from .params import precompute_serving_params
 
 
 @dataclasses.dataclass
@@ -32,18 +39,46 @@ class Request:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 max_seq: int = 256, sample: bool = False, mesh=None):
+                 max_seq: int = 256, sample: bool = False, mesh=None,
+                 precompute: bool = True, decode_mode: str = "scan",
+                 eos_id: Optional[int] = None, temperature: float = 1.0):
+        assert decode_mode in ("scan", "per_token"), decode_mode
         self.cfg = cfg
-        self.params = params
+        self.params = (precompute_serving_params(params, cfg)
+                       if precompute else params)
         self.model = build_model(cfg)
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.sample = sample
+        self.decode_mode = decode_mode
+        self.eos_id = eos_id
+        self.temperature = temperature
+        # Largest sliding window any block uses: the ring-buffer prefill
+        # keeps the window tail, so batch prompts must cover it (validated
+        # per batch below instead of failing as a trace-time assert).
+        self._swa_window = 0 if cfg.is_encoder_decoder else max(
+            [tfm._window_for(kind, cfg)
+             for pattern, _ in tfm.segments_for(cfg)
+             for kind in pattern], default=0)
         # Activations are pinned through the same policy the production
         # dry-run uses; default is this host's (n, 1) data-parallel mesh.
         self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh()
         self._prefill = jax.jit(dec.make_prefill_step(cfg))
-        self._decode = jax.jit(dec.make_decode_step(cfg, sample=sample),
-                               donate_argnums=(2,))
+        self._decode = jax.jit(
+            dec.make_decode_step(cfg, sample=sample, temperature=temperature),
+            donate_argnums=(2,))
+        self._loops: Dict[int, object] = {}
+
+    def _loop_fn(self, steps: int):
+        """jit'd decode loop for a step budget (cached per budget)."""
+        fn = self._loops.get(steps)
+        if fn is None:
+            fn = jax.jit(dec.make_decode_loop(
+                self.cfg, steps, sample=self.sample,
+                temperature=self.temperature, eos_id=self.eos_id),
+                donate_argnums=(2,))
+            self._loops[steps] = fn
+        return fn
 
     def _make_batch(self, reqs: Sequence[Request]) -> Dict:
         B = len(reqs)
@@ -72,22 +107,62 @@ class Engine:
             return self._generate_batch_inner(reqs)
 
     def _generate_batch_inner(self, reqs: Sequence[Request]) -> List[Dict]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         batch = self._make_batch(reqs)
         B, S = batch["tokens"].shape
+        if S > self.max_seq:
+            raise ValueError(f"prompt length {S} exceeds max_seq "
+                             f"{self.max_seq}")
+        # Decode step j writes cache position S+j-1 (j=1..steps-1), so the
+        # cache needs S+steps-1 slots; clamp the step budget instead of
+        # letting dynamic_update_slice silently clobber the last slot
+        # (regression-tested in test_decode_loop.py).
         steps = max(r.max_new_tokens for r in reqs)
-        cache = self.model.init_cache(B, min(S + steps, self.max_seq),
-                                      dtype=jnp.float32)
+        steps = max(1, min(steps, self.max_seq - S + 1))
+        need = min(self._swa_window, S + steps - 1)
+        if self._swa_window and S < need:
+            raise ValueError(
+                f"batch prompt length {S} does not cover the sliding-window "
+                f"ring buffer ({need}): SWA prefill keeps the window tail, "
+                f"so prompts must be >= min(window, cache length)")
+        cache = self.model.init_cache(B, S + steps - 1, dtype=jnp.float32)
         logits, cache = self._prefill(self.params, batch, cache)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        jax.block_until_ready(nxt)
+        t1 = time.perf_counter()
+
+        if self.decode_mode == "per_token":
+            gen = self._decode_per_token(nxt, cache, S, steps)
+        else:
+            lengths = jnp.asarray([min(r.max_new_tokens, steps)
+                                   for r in reqs], jnp.int32)
+            gen, _ = self._loop_fn(steps)(self.params, nxt, cache,
+                                          jnp.int32(S), lengths)
+        gen = np.asarray(gen)                          # (B, steps)
+        t2 = time.perf_counter()
+        prefill_s, decode_s = t1 - t0, t2 - t1
+
+        out = []
+        for i, r in enumerate(reqs):
+            toks = gen[i, :min(r.max_new_tokens, steps)].tolist()
+            if self.eos_id is not None and self.eos_id in toks:
+                toks = toks[:toks.index(self.eos_id) + 1]
+            out.append({
+                "id": r.id,
+                "tokens": toks,
+                "decode_len": len(toks),
+                "tokens_per_s": len(toks) / max(decode_s, 1e-9),
+                "prefill_s": prefill_s,
+                "decode_s": decode_s,
+                "latency_s": prefill_s + decode_s,
+            })
+        return out
+
+    def _decode_per_token(self, nxt, cache, S: int, steps: int) -> np.ndarray:
+        """Seed host loop: one dispatch per token (baseline/oracle path)."""
         toks = [nxt]
-        pos = S
-        for _ in range(steps - 1):
+        for pos in range(S, S + steps - 1):
             _, nxt, cache = self._decode(self.params, nxt[:, None], cache,
                                          jnp.int32(pos))
             toks.append(nxt)
-            pos += 1
-        gen = np.asarray(jnp.stack(toks, 1))           # (B, steps)
-        dt = time.time() - t0
-        return [{"id": r.id, "tokens": gen[i, :r.max_new_tokens].tolist(),
-                 "latency_s": dt} for i, r in enumerate(reqs)]
+        return np.asarray(jnp.stack(toks, 1))          # (B, steps)

@@ -1,0 +1,151 @@
+"""Offline spectral-weight precomputation for serving.
+
+The paper's hardware story FFTs the block-circulant weights ONCE, offline,
+and keeps only the spectral planes on-chip; the serve hot path then runs
+input-DFT -> spectral MAC -> iDFT with no weight transform in the loop.
+``precompute_serving_params`` is that offline pass as a parameter-tree
+transform: it walks the params once and bakes
+
+* ``wc_cache``       next to every block-circulant generator ``wc`` that the
+                     serve lowering resolves to the spectral path (rfft real
+                     planes + Gauss combos, see ``core.circulant``),
+* ``qkv_cache``      at attention-params level (q/k/v planes concatenated on
+                     the output-block axis) when projection fusion is on, so
+                     the fused QKV projection is one cached contraction —
+                     the per-projection q/k/v planes it shadows are dropped
+                     (single-copy footprint; cross-attention never fuses and
+                     keeps them),
+* ``upgate_cache``   likewise for gated-MLP up/gate pairs,
+* ``{up,gate,down}_cache`` inside per-expert MoE stacks.
+
+``apply_linear`` / ``bc_matmul_fused`` / ``_expert_ffn`` consult these only
+outside train mode, so the same tree remains valid for training (the caches
+are simply dead weight there — strip with ``strip_serving_params``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import circulant as cc
+
+_CACHE_KEYS = ("wc_cache", "qkv_cache", "upgate_cache",
+               "up_cache", "gate_cache", "down_cache")
+
+
+def _spectral_at_serve(comp, k: int) -> bool:
+    """Whether a block-size-k projection serves through the spectral path
+    (same dispatch `apply_linear` runs, so the bake never changes a layer's
+    resolved lowering)."""
+    if not k:
+        return False
+    spec = cc.LinearSpec("block_circulant", k, comp.path, comp.gauss_trick)
+    return spec.resolve_path("serve") == "spectral"
+
+
+def _is_bc(node: Any) -> bool:
+    return isinstance(node, dict) and "wc" in node and not isinstance(
+        node["wc"], dict)
+
+
+def _same_block(nodes) -> bool:
+    shapes = [n["wc"].shape for n in nodes]
+    return all(s[-2:] == shapes[0][-2:] and len(s) == len(shapes[0])
+               for s in shapes)
+
+
+def precompute_serving_params(params, cfg: ArchConfig):
+    """Bake spectral serving caches into a parameter tree (pure transform).
+
+    Returns a new tree with the same original leaves plus the cache entries;
+    idempotent (already-baked subtrees are left alone).  Works under
+    ``jax.eval_shape`` (the dry-run bakes shape-structs, no allocation).
+    """
+    comp = cfg.compression
+    if not comp.enabled:
+        return params
+    gauss = comp.gauss_trick
+    fuse = getattr(comp, "fuse_projections", False)
+    k_exp = comp.block_for("expert")
+
+    def fusable(node, names, name):
+        """Will the fused serve path shadow these projections' planes?
+        ("o" excludes the look-alike mLSTM cell dict, which does not fuse;
+        cross-attention never fuses either, so its subtree keeps only the
+        per-projection planes.)"""
+        return (fuse and name != "cross"
+                and ("o" in node if "q" in names else True)
+                and all(_is_bc(node.get(n)) for n in names)
+                and _same_block([node[n] for n in names])
+                and _spectral_at_serve(comp,
+                                       int(node[names[0]]["wc"].shape[-1])))
+
+    def bake(node, name="", shadowed=False):
+        if isinstance(node, dict):
+            fuse_qkv = fusable(node, ("q", "k", "v"), name)
+            fuse_upgate = fusable(node, ("up", "gate"), name)
+            shadow = (({"q", "k", "v"} if fuse_qkv else set())
+                      | ({"up", "gate"} if fuse_upgate else set()))
+            out = {key: bake(v, key, key in shadow)
+                   for key, v in node.items()}
+            # per-projection planes (the generic case: o/down/out/…) —
+            # skipped when a fused cache below will shadow them, keeping the
+            # serving-cache footprint single-copy
+            if _is_bc(node) and "wc_cache" not in node and not shadowed:
+                k = int(node["wc"].shape[-1])
+                if _spectral_at_serve(comp, k):
+                    out["wc_cache"] = cc.spectral_cache(node["wc"], gauss)
+            if fuse_qkv and "qkv_cache" not in node:
+                out["qkv_cache"] = cc.fused_spectral_cache(
+                    [node[n]["wc"] for n in ("q", "k", "v")], gauss)
+            if fuse_upgate and "upgate_cache" not in node:
+                out["upgate_cache"] = cc.fused_spectral_cache(
+                    [node[n]["wc"] for n in ("up", "gate")], gauss)
+            # per-expert stacks: (E, p, q, k) arrays, not LinearSpec dicts
+            if (k_exp and _spectral_at_serve(comp, k_exp)
+                    and all(not isinstance(node.get(n), dict)
+                            and getattr(node.get(n), "ndim", 0) >= 4
+                            and node[n].shape[-1] == k_exp
+                            for n in ("up", "gate", "down"))):
+                for n in ("up", "gate", "down"):
+                    if f"{n}_cache" not in node:
+                        out[f"{n}_cache"] = cc.spectral_cache(node[n], gauss)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(bake(v, name, shadowed) for v in node)
+        return node
+
+    return bake(params)
+
+
+def strip_serving_params(params):
+    """Remove every baked serving cache (inverse of the precompute pass)."""
+    def strip(node):
+        if isinstance(node, dict):
+            return {k: strip(v) for k, v in node.items()
+                    if k not in _CACHE_KEYS}
+        if isinstance(node, (list, tuple)):
+            return type(node)(strip(v) for v in node)
+        return node
+    return strip(params)
+
+
+def serving_cache_bytes(params) -> int:
+    """Total bytes of baked spectral planes (reporting/benchmarks)."""
+    total = 0
+
+    def walk(path, node):
+        nonlocal total
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (k,), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(path + (str(i),), v)
+        elif any(c in path for c in _CACHE_KEYS):
+            total += int(node.size) * np.dtype(node.dtype).itemsize
+
+    walk((), params)
+    return total

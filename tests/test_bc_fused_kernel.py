@@ -1,5 +1,6 @@
 """Fused three-phase block-circulant Pallas kernel vs the pure-jnp oracle,
-swept over shapes/dtypes (interpret mode)."""
+swept over shapes/dtypes (interpret mode), plus the REPRO_KERNELS dispatch
+through kernels/ops.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,7 @@ import pytest
 
 from repro.core import circulant as cc
 from repro.kernels import bc_fused
+from repro.kernels import ops as kops
 
 
 @pytest.mark.parametrize("n_in,n_out,k,B", [
@@ -40,4 +42,32 @@ def test_fused_kernel_grid_tiling():
     ref = cc.bc_matmul_direct(x, w, 256)
     out_tiled = bc_fused.bc_linear_fused_kernel(x, w, 256, interpret=True)
     np.testing.assert_allclose(np.asarray(out_tiled), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch policy: bc_linear_fused routes through ops.py like the other two
+# kernels — 'off' lowers to the XLA cached-spectral path, 'interpret' runs
+# the Pallas body, and the env var drives the default.
+# ---------------------------------------------------------------------------
+def test_ops_dispatch_off_matches_interpret():
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), 64, 96, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    ref = cc.bc_matmul_direct(x, w, 96)
+    off = kops.bc_linear_fused(x, w, 96, mode="off")
+    interp = kops.bc_linear_fused(x, w, 96, mode="interpret")
+    np.testing.assert_allclose(np.asarray(off), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(interp), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ops_dispatch_env_default(monkeypatch):
+    w = cc.init_block_circulant(jax.random.PRNGKey(0), 32, 32, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    monkeypatch.setenv("REPRO_KERNELS", "off")
+    assert kops.kernel_mode() == "off"
+    out = kops.bc_linear_fused(x, w, 32)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(cc.bc_matmul_direct(x, w, 32)),
                                rtol=2e-3, atol=2e-3)

@@ -1,0 +1,134 @@
+"""Device-resident decode loop: bit-identity with the seed per-token loop,
+per-request length handling, EOS early-exit, and the cache-length clamp."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, Request
+
+# Prompts must cover the smoke sliding window (16): the ring-buffer prefill
+# keeps the window tail and asserts S >= window (pre-existing engine
+# behavior, see DESIGN.md).
+PROMPT_LEN = 20
+
+
+def _reqs(n=2, new=5, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(prompt=rng.randint(1, 500, size=PROMPT_LEN)
+                    .astype(np.int32), max_new_tokens=new, id=i)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def engine(request):
+    cfg = get_smoke_config(request.param)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(cfg, params, max_batch=4, max_seq=64)
+
+
+def test_scanned_matches_per_token(engine):
+    """Greedy tokens from the device loop == the seed host loop, bitwise."""
+    a = [r["tokens"] for r in engine.generate(_reqs())]
+    engine.decode_mode = "per_token"
+    try:
+        b = [r["tokens"] for r in engine.generate(_reqs())]
+    finally:
+        engine.decode_mode = "scan"
+    assert a == b
+
+
+def test_scanned_matches_per_token_fused():
+    """Same bit-identity with projection fusion (the fused spectral path)."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    cfg = cfg.replace(compression=dataclasses.replace(
+        cfg.compression, fuse_projections=True))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, max_seq=64)
+    a = [r["tokens"] for r in eng.generate(_reqs())]
+    eng.decode_mode = "per_token"
+    b = [r["tokens"] for r in eng.generate(_reqs())]
+    assert a == b
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params, Engine(cfg, params, max_batch=4, max_seq=64)
+
+
+def test_ragged_lengths_on_device(tiny_engine):
+    """Per-request budgets are honored inside the device loop: a short
+    request's tokens are a prefix of the same request run longer."""
+    _, _, eng = tiny_engine
+    reqs = _reqs(n=3, new=8)
+    reqs[1] = dataclasses.replace(reqs[1], max_new_tokens=3)
+    out = eng.generate(reqs)
+    assert [r["decode_len"] for r in out] == [8, 3, 8]
+    long = eng.generate([dataclasses.replace(reqs[1], max_new_tokens=8)])
+    assert out[1]["tokens"] == long[0]["tokens"][:3]
+
+
+def test_eos_early_exit(tiny_engine):
+    """With eos_id set, tokens stop at the first EOS the model emits."""
+    cfg, params, ref = tiny_engine
+    reqs = _reqs(n=2, new=8)
+    base = ref.generate(reqs)
+    # pick the token the model actually emits mid-stream as the "EOS"
+    eos = base[0]["tokens"][2]
+    eng = Engine(cfg, params, max_batch=4, max_seq=64, eos_id=eos)
+    out = eng.generate(reqs)
+    toks = out[0]["tokens"]
+    assert toks == base[0]["tokens"][:base[0]["tokens"].index(eos) + 1]
+    assert toks[-1] == eos and eos not in toks[:-1]
+
+
+def test_cache_clamp_regression(tiny_engine):
+    """Prompts near max_seq clamp the step budget instead of writing past
+    the allocated cache (seed bug: decode positions reached S + steps - 1
+    with only min(S + steps, max_seq) slots allocated)."""
+    cfg, params, ref = tiny_engine
+    eng = Engine(cfg, params, max_batch=4, max_seq=24)
+    req = _reqs(n=1, new=16)[0]                    # S=20 -> budget 24-20+1=5
+    out = eng.generate([req])
+    assert out[0]["decode_len"] == 5
+    # the clamped tokens agree with an engine that has cache headroom
+    want = ref.generate([dataclasses.replace(req, max_new_tokens=5)])
+    assert out[0]["tokens"] == want[0]["tokens"]
+
+
+def test_prompt_longer_than_max_seq_raises(tiny_engine):
+    cfg, params, _ = tiny_engine
+    eng = Engine(cfg, params, max_batch=4, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.generate(_reqs(n=1))                   # PROMPT_LEN=20 > 16
+
+
+def test_prompt_shorter_than_swa_window_raises():
+    """SWA ring-buffer prefill needs prompts covering the window — a clean
+    engine error now, not a trace-time assert."""
+    cfg = get_smoke_config("mixtral-8x7b")         # window 16, every layer
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_seq=64)
+    short = [Request(prompt=np.arange(6, dtype=np.int32) + 1,
+                     max_new_tokens=4, id=0)]
+    with pytest.raises(ValueError, match="sliding-window"):
+        eng.generate(short)
+
+
+def test_request_metrics(tiny_engine):
+    _, _, eng = tiny_engine
+    out = eng.generate(_reqs(n=2, new=4))
+    for r in out:
+        assert r["decode_len"] == len(r["tokens"]) == 4
+        assert r["tokens_per_s"] > 0
+        assert r["latency_s"] == pytest.approx(
+            r["prefill_s"] + r["decode_s"])

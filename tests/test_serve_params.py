@@ -1,0 +1,171 @@
+"""Offline spectral precompute pass: plane correctness, train invariance,
+and the no-weight-FFT-inside-decode property (trace counting)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core import circulant as cc
+from repro.layers import ffn as ffn_lib
+from repro.models.registry import build_model
+from repro.serve import decode as dec
+from repro.serve.params import (precompute_serving_params,
+                                serving_cache_bytes, strip_serving_params)
+
+
+def _cfg(arch="tinyllama-1.1b", fuse=False):
+    cfg = get_smoke_config(arch)
+    return cfg.replace(compression=dataclasses.replace(
+        cfg.compression, fuse_projections=fuse))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_planes_match_on_the_fly_cache(tiny):
+    """Baked wc_cache == spectral_cache(wc) computed on the fly (fp32)."""
+    cfg, _, params = tiny
+    baked = precompute_serving_params(params, cfg)
+    seg = baked["segments"][0]
+    checked = 0
+    for blk in seg:
+        for name in ("q", "k", "v", "o"):
+            node = blk["attn"][name]
+            assert "wc_cache" in node
+            want = cc.spectral_cache(node["wc"], cfg.compression.gauss_trick)
+            for plane in want:
+                np.testing.assert_allclose(
+                    np.asarray(node["wc_cache"][plane]),
+                    np.asarray(want[plane]), rtol=1e-6, atol=1e-6)
+                checked += 1
+    assert checked
+
+
+def test_fused_planes_are_concatenated(tiny):
+    """qkv_cache is the generators' planes stacked on the p axis in q/k/v
+    order (what bc_matmul_fused splits back apart); the per-projection
+    planes it shadows are dropped, while unfused projections keep theirs."""
+    cfg, _, params = tiny
+    gauss = cfg.compression.gauss_trick
+    baked = precompute_serving_params(
+        params, cfg.replace(compression=dataclasses.replace(
+            cfg.compression, fuse_projections=True)))
+    blk = baked["segments"][0][0]
+    qkv = blk["attn"]["qkv_cache"]
+    want = cc.spectral_cache(jnp.concatenate(
+        [blk["attn"][n]["wc"] for n in ("q", "k", "v")], axis=-3), gauss)
+    np.testing.assert_allclose(np.asarray(qkv["wr"]),
+                               np.asarray(want["wr"]), rtol=1e-6, atol=1e-6)
+    up = blk["mlp"]["upgate_cache"]
+    want = cc.spectral_cache(jnp.concatenate(
+        [blk["mlp"][n]["wc"] for n in ("up", "gate")], axis=-3), gauss)
+    np.testing.assert_allclose(np.asarray(up["wr"]),
+                               np.asarray(want["wr"]), rtol=1e-6, atol=1e-6)
+    # single-copy footprint: fused planes replace the per-projection ones
+    for n in ("q", "k", "v"):
+        assert "wc_cache" not in blk["attn"][n]
+    assert "wc_cache" in blk["attn"]["o"]
+    for n in ("up", "gate"):
+        assert "wc_cache" not in blk["mlp"][n]
+    assert "wc_cache" in blk["mlp"]["down"]
+
+
+def test_decode_logits_match_with_and_without_precompute(tiny):
+    """Serving math is unchanged by the offline pass (fp32 tolerance)."""
+    cfg, model, params = tiny
+    baked = precompute_serving_params(params, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 500)
+
+    def run(p):
+        cache = model.init_cache(B, S + 2, dtype=jnp.float32)
+        lg, cache = model.prefill(p, {"tokens": toks}, cache)
+        nxt = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        lg2, _ = model.decode_step(p, nxt, cache, jnp.int32(S))
+        return lg, lg2
+
+    for a, b in zip(run(params), run(baked)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_train_forward_ignores_baked_caches(tiny):
+    """forward_train differentiates through wc, not the baked planes."""
+    cfg, model, params = tiny
+    baked = precompute_serving_params(params, cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 8),
+                                          0, 500),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    a, _ = model.forward_train(params, batch)
+    b, _ = model.forward_train(baked, batch)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_strip_and_idempotence(tiny):
+    cfg, _, params = tiny
+    baked = precompute_serving_params(params, cfg)
+    assert serving_cache_bytes(baked) > 0
+    again = precompute_serving_params(baked, cfg)
+    assert (jax.tree_util.tree_structure(again)
+            == jax.tree_util.tree_structure(baked))
+    stripped = strip_serving_params(baked)
+    assert (jax.tree_util.tree_structure(stripped)
+            == jax.tree_util.tree_structure(params))
+    for a, b in zip(jax.tree.leaves(stripped), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance property: with precomputed params, tracing the jitted decode
+# step performs ZERO weight-side FFTs.  Every weight FFT funnels through
+# `spectral_cache` (apply_linear's on-the-fly path) or `bc_matmul_fft` (the
+# train lowering / expert FFN / fused projections), so spying on those during
+# trace is an exact count.  ffn.py binds bc_matmul_fft by from-import, so its
+# reference is patched too.
+# ---------------------------------------------------------------------------
+def _weight_fft_trace_count(cfg, params) -> int:
+    counts = [0]
+    orig_sc, orig_fft = cc.spectral_cache, cc.bc_matmul_fft
+    orig_ffn_fft = ffn_lib.bc_matmul_fft
+
+    def sc(w, gauss=True):
+        counts[0] += 1
+        return orig_sc(w, gauss)
+
+    def fft(x, w, n_out, gauss=True):
+        counts[0] += 1
+        return orig_fft(x, w, n_out, gauss)
+
+    cc.spectral_cache, cc.bc_matmul_fft = sc, fft
+    ffn_lib.bc_matmul_fft = fft
+    try:
+        step = dec.make_decode_step(cfg)
+        cache = jax.eval_shape(
+            lambda: build_model(cfg).init_cache(2, 24, dtype=jnp.float32))
+        jax.eval_shape(step, params, jax.ShapeDtypeStruct((2, 1), jnp.int32),
+                       cache, jax.ShapeDtypeStruct((), jnp.int32))
+    finally:
+        cc.spectral_cache, cc.bc_matmul_fft = orig_sc, orig_fft
+        ffn_lib.bc_matmul_fft = orig_ffn_fft
+    return counts[0]
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mixtral-8x7b"])
+@pytest.mark.parametrize("fuse", [False, True])
+def test_no_weight_fft_in_decode_trace(arch, fuse):
+    cfg = _cfg(arch, fuse=fuse)
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    baked = jax.eval_shape(
+        lambda p: precompute_serving_params(p, cfg), params)
+    assert _weight_fft_trace_count(cfg, params) > 0      # spy sanity
+    assert _weight_fft_trace_count(cfg, baked) == 0
