@@ -357,6 +357,62 @@ def cache_specs(cache, mesh, global_batch: int):
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def page_pool_spec(shape: Sequence[int], mesh) -> P:
+    """Spec for one paged KV-pool leaf ``(..., P, page, Hkv, D)``
+    (serve/kvcache.py) — pages shard like the dense cache they replace:
+
+    * the PAGE-ID dim takes the DP axes (each DP shard owns a slice of the
+      free pool, the way the dense cache's batch dim spread requests over
+      DP) when divisible, else replicates;
+    * heads take "model" when divisible, falling back to head_dim (GQA
+      archs have too few KV heads for a 16-way model axis) — identical to
+      ``cache_spec``;
+    * the in-page offset dim is NEVER sharded (decode writes single slots
+      at dynamic offsets, same reason the dense sequence dim never shards);
+    * extra leading dims are scan-stack dims, never sharded.
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) < 4:
+        return P()
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    entries: List[Any] = [None] * len(shape)
+    p_idx = len(shape) - 4
+    if dpa and shape[p_idx] % _prod(sizes[a] for a in dpa) == 0:
+        entries[p_idx] = tuple(dpa)
+    m = sizes.get(MODEL_AXIS)
+    if m:
+        if shape[-2] % m == 0:
+            entries[-2] = MODEL_AXIS
+        elif shape[-1] % m == 0:
+            entries[-1] = MODEL_AXIS
+    return P(*entries)
+
+
+def dp_round_up(n: int, mesh) -> int:
+    """Round a page count up to a multiple of the mesh's DP-axis product.
+
+    ``page_pool_spec`` only shards the page dim when it divides the DP
+    product; an off-by-one pool (e.g. the +1 trash page) would otherwise
+    silently replicate the whole pool over the data-parallel devices.
+    """
+    sizes = axis_sizes(mesh)
+    dp = _prod(sizes[a] for a in dp_axes(mesh)) or 1
+    return -(-int(n) // dp) * dp
+
+
+def pool_specs(pool, mesh):
+    """``page_pool_spec`` mapped over a paged-pool pytree (block tables and
+    other integer leaves replicate)."""
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if np.issubdtype(np.dtype(getattr(leaf, "dtype", np.float32)),
+                         np.integer):
+            return P()
+        return page_pool_spec(shape, mesh)
+    return jax.tree.map(one, pool)
+
+
 def logits_spec(mesh, global_batch: int, vocab: int) -> P:
     """Spec for (B, S, V) logits: batch over DP, vocab over "model" (the
     tied LM head is vocab-sharded column TP), seq replicated."""

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from ..core import circulant as _cc
 from . import bc_fused as _bcf
 from . import flash_attention as _fa
+from . import paged as _paged
 from . import ref as _ref
 from . import spectral_matmul as _sm
 
@@ -49,6 +50,22 @@ def bc_linear_fused(x, w, n_out: int, mode: str | None = None, **block_kw):
     return _bcf.bc_linear_fused_kernel(x, w, n_out,
                                        interpret=(mode == "interpret"),
                                        **block_kw)
+
+
+def paged_gather(pool, table, mode: str | None = None):
+    """Gather a slot-contiguous KV view out of a paged pool.
+
+    pool: (P, page, H, D); table: (B, maxp) int32 page ids ->
+    (B, maxp * page, H, D).  'off' lowers through a plain XLA gather
+    (``pool[table]``); kernel modes run the scalar-prefetch Pallas gather.
+    """
+    mode = mode or kernel_mode()
+    if mode == "off":
+        _, page, H, D = pool.shape
+        B, maxp = table.shape
+        return pool[table].reshape(B, maxp * page, H, D)
+    return _paged.paged_gather_kernel(pool, table,
+                                      interpret=(mode == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: paged KV gather (block table -> contiguous KV view).
+
+The continuous-batching engine stores KV state as fixed-size pages in a
+shared pool (``serve/kvcache.py``); decode needs each slot's pages laid out
+contiguously for attention.  On TPU the block table rides scalar prefetch
+(``PrefetchScalarGridSpec``), so the page id is known before the grid step
+runs and the pool page is DMA'd straight into the output block — one page
+per grid step, no gather materialization in HBM beyond the output itself.
+
+This mirrors the paper's hierarchical control: the block table is the
+"control plane" (tiny, scalar memory), the pool is the "data plane"
+(weights-sized, streamed) — the same split the FPGA controller uses between
+its instruction BRAM and the data buffers.
+
+Call through ``kernels.ops.paged_gather`` — the REPRO_KERNELS dispatch
+('interpret'/'tpu'/'off') lives there; 'off' lowers the same gather as
+plain XLA ``pool[table]`` indexing (see ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(table_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...].reshape(out_ref.shape)
+
+
+def paged_gather_kernel(pool: jax.Array, table: jax.Array,
+                        interpret: bool = False) -> jax.Array:
+    """pool: (P, page, H, D); table: (B, maxp) int32 page ids.
+
+    Returns (B, maxp * page, H, D): slot b's pages concatenated in table
+    order (position ``i`` of slot b lives at page ``table[b, i // page]``,
+    offset ``i % page``).
+    """
+    P, page, H, D = pool.shape
+    B, maxp = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, maxp),
+        in_specs=[
+            pl.BlockSpec((1, page, H, D),
+                         lambda b, p, tref: (tref[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, H, D),
+                               lambda b, p, tref: (b, p, 0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, maxp, page, H, D), pool.dtype),
+        interpret=interpret,
+    )(table, pool)
+    return out.reshape(B, maxp * page, H, D)

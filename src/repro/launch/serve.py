@@ -1,6 +1,9 @@
-"""Serving launcher: batched-request engine for any assigned architecture.
+"""Serving launcher: batch-synchronous or continuous-batching engine for any
+assigned architecture.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --engine continuous --page-size 16 --max-tokens-in-flight 512
 """
 from __future__ import annotations
 
@@ -12,7 +15,8 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
 from ..models.registry import build_model
-from ..serve.engine import Engine, Request
+from ..serve.engine import ContinuousEngine, Engine, Request
+from ..serve.kvcache import servable_reasons
 
 
 def main():
@@ -21,14 +25,29 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="batch engine: batch size; continuous: decode slots")
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed (reproducible per engine)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="early-exit the device decode loop at this token")
+    ap.add_argument("--engine", default="batch",
+                    choices=["batch", "continuous"],
+                    help="batch-synchronous engine or the continuous-"
+                         "batching engine over the paged KV pool")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="continuous: KV pool page size (tokens per block)")
+    ap.add_argument("--max-tokens-in-flight", type=int, default=None,
+                    help="continuous: admission token budget")
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="continuous: decode steps per device dispatch")
     ap.add_argument("--decode-mode", default="scan",
                     choices=["scan", "per_token"],
-                    help="device-resident loop (default) or the seed "
-                         "per-token host loop")
+                    help="batch engine: device-resident loop (default) or "
+                         "the seed per-token host loop")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="batch engine: disable prompt-length bucketing")
     ap.add_argument("--no-precompute", action="store_true",
                     help="skip the offline spectral-weight pass")
     args = ap.parse_args()
@@ -37,10 +56,26 @@ def main():
     cfg = getter(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_batch=args.max_batch,
-                    max_seq=64 + args.new_tokens, sample=args.sample,
-                    precompute=not args.no_precompute,
-                    decode_mode=args.decode_mode, eos_id=args.eos_id)
+    max_seq = 64 + args.new_tokens
+    if args.engine == "continuous":
+        reasons = servable_reasons(cfg)
+        if reasons:
+            raise SystemExit(f"[launch.serve] {args.arch} is not continuous-"
+                             f"servable ({'; '.join(reasons)}); "
+                             f"use --engine batch")
+        engine = ContinuousEngine(
+            cfg, params, max_slots=args.max_batch, max_seq=max_seq,
+            page_size=args.page_size,
+            max_tokens_in_flight=args.max_tokens_in_flight,
+            decode_chunk=args.decode_chunk, sample=args.sample,
+            seed=args.seed, eos_id=args.eos_id,
+            precompute=not args.no_precompute)
+    else:
+        engine = Engine(cfg, params, max_batch=args.max_batch,
+                        max_seq=max_seq, sample=args.sample,
+                        precompute=not args.no_precompute,
+                        decode_mode=args.decode_mode, eos_id=args.eos_id,
+                        seed=args.seed, bucket_prompts=not args.no_bucket)
     rng = np.random.RandomState(0)
     # prompts cover the smoke sliding window (16): the ring-buffer prefill
     # keeps the window tail and needs S >= window for SWA archs
@@ -53,9 +88,24 @@ def main():
     toks = sum(r["decode_len"] for r in results)
     pre = sum(r["prefill_s"] for r in results) / max(len(results), 1)
     deco = sum(r["decode_s"] for r in results) / max(len(results), 1)
-    print(f"[launch.serve] {args.arch}: {len(results)} requests, "
-          f"{toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s; "
+    print(f"[launch.serve] {args.arch} ({args.engine}): {len(results)} "
+          f"requests, {toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s; "
           f"mean prefill {pre * 1e3:.0f}ms / decode {deco * 1e3:.0f}ms)")
+    st = engine.stats()
+    if args.engine == "continuous":
+        print(f"[launch.serve] telemetry: queue_depth={st['queue_depth']} "
+              f"peak_tokens_in_flight={st['peak_tokens_in_flight']} "
+              f"peak_pages={st['peak_pages_in_use']}/{engine.num_pages - 1} "
+              f"pool={st['pool_bytes'] / 1e6:.1f}MB "
+              f"prefill/decode split={st['prefill_s']:.2f}s/"
+              f"{st['decode_s']:.2f}s "
+              f"dispatches={st['decode_dispatches']} "
+              f"buckets={st['prefill_buckets']}")
+    else:
+        print(f"[launch.serve] telemetry: batches={st['batches']} "
+              f"prompt_pad_waste={st['prompt_pad_waste']} tokens "
+              f"prefill/decode split={st['prefill_s']:.2f}s/"
+              f"{st['decode_s']:.2f}s")
 
 
 if __name__ == "__main__":

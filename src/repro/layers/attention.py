@@ -44,9 +44,11 @@ def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                       q_chunk=1024, kv_chunk=1024):
     """q: (B, Sq, Hq, D);  k/v: (B, Skv, Hkv, D)  ->  (B, Sq, Hq, D).
 
-    ``q_pos0``: absolute position of q[:,0] (decode: cache length).
+    ``q_pos0``: absolute position of q[:,0] (decode: cache length).  May be
+    a per-row ``(B,)`` array (paged decode: every slot sits at its own
+    position); the masks then broadcast per row.
     ``kv_positions``: explicit kv absolute positions (ring buffers); default
-    is contiguous `arange(Skv)`.
+    is contiguous `arange(Skv)`.  May be ``(B, Skv)`` (paged decode).
     """
     B, Sq, Hq, D = q.shape
     _, Skv, Hkv, _ = k.shape
@@ -63,7 +65,10 @@ def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
     outs = []
     for iq in range(nq):
         q_blk = qh[:, :, :, iq * cq:(iq + 1) * cq].astype(jnp.float32) * scale
-        rows = q_pos0 + iq * cq + jnp.arange(q_blk.shape[3])
+        if getattr(q_pos0, "ndim", 0) == 1:               # per-row positions
+            rows = q_pos0[:, None] + iq * cq + jnp.arange(q_blk.shape[3])
+        else:
+            rows = q_pos0 + iq * cq + jnp.arange(q_blk.shape[3])
 
         # static kv extent for this q chunk (contiguous-position case only)
         if kv_positions is None and causal and not isinstance(q_pos0, jax.Array):
@@ -84,6 +89,9 @@ def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
             v_blk = jnp.pad(v_blk, ((0, 0), (0, 0), (0, pad), (0, 0)))
         if kv_positions is None:
             kpos = lo + jnp.arange(nkv * ck)
+        elif kv_positions.ndim == 2:                      # (B, Skv) per-row
+            kpos = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                           constant_values=-1)
         else:
             kpos = jnp.pad(kv_positions, (0, pad), constant_values=-1)
         kpos = jnp.where(jnp.arange(nkv * ck) < (hi - lo), kpos, -1)
@@ -91,7 +99,10 @@ def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         # (nkv, B, Hkv, ck, D) stacked chunks for the scan
         ks = k_blk.reshape(B, Hkv, nkv, ck, D).transpose(2, 0, 1, 3, 4)
         vs = v_blk.reshape(B, Hkv, nkv, ck, D).transpose(2, 0, 1, 3, 4)
-        kps = kpos.reshape(nkv, ck)
+        if kpos.ndim == 2:
+            kps = kpos.reshape(B, nkv, ck).transpose(1, 0, 2)
+        else:
+            kps = kpos.reshape(nkv, ck)
 
         m0 = jnp.full((B, Hkv, G, q_blk.shape[3]), _NEG, jnp.float32)
         l0 = jnp.zeros_like(m0)
@@ -104,7 +115,13 @@ def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                            kc.astype(jnp.float32))
             if softcap:
                 s = softcap * jnp.tanh(s / softcap)
-            msk = _mask(rows[:, None], kp[None, :], causal, window)
+            if rows.ndim == 2 or kp.ndim == 2:            # per-row masking
+                r = rows if rows.ndim == 2 else rows[None, :]
+                c = kp if kp.ndim == 2 else kp[None, :]
+                msk = _mask(r[:, None, None, :, None],
+                            c[:, None, None, None, :], causal, window)
+            else:
+                msk = _mask(rows[:, None], kp[None, :], causal, window)
             s = jnp.where(msk, s, _NEG)
             m_n = jnp.maximum(m_p, s.max(-1))
             p = jnp.exp(s - m_n[..., None])
@@ -160,12 +177,21 @@ def init_attention(key, cfg, d_model: int, comp=None) -> Dict:
 def attention_block(params, x, *, cfg, causal=True, window=0,
                     positions=None, cache=None, cache_pos=None,
                     cross_kv=None, mode="train", impl="chunked",
-                    q_chunk=1024, kv_chunk=1024) -> Tuple[jax.Array, Optional[Dict]]:
+                    q_chunk=1024, kv_chunk=1024,
+                    block_table=None) -> Tuple[jax.Array, Optional[Dict]]:
     """Full attention block.  Returns (out, updated_cache).
 
     cache: {"k": (B, Smax, Hkv, D), "v": ..., "pos": (Smax,) int32} or None.
     cache_pos: scalar absolute position of the first new token (decode).
     cross_kv: precomputed (k, v) from the encoder (cross-attention).
+
+    Paged decode (``block_table`` set): cache is a page POOL
+    {"k": (P, page, Hkv, D), "v": ...} shared by every slot;
+    ``block_table`` (B, maxp) maps slot positions onto pages and
+    ``cache_pos`` is per-slot (B,) — position ``i`` of slot ``b`` lives at
+    page ``block_table[b, i // page]``, offset ``i % page``.  A slot with
+    ``cache_pos == -1`` is idle: its write routes to the reserved trash
+    page 0 and its attention is fully masked (output discarded upstream).
     """
     a = cfg.attention
     comp = cfg.compression
@@ -206,11 +232,17 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
         q = norms.rmsnorm(params["qn"], q)
         k = norms.rmsnorm(params["kn"], k)
 
+    paged = block_table is not None and cache is not None and cross_kv is None
     q_pos0 = 0 if cache_pos is None else cache_pos
+    if paged:
+        q_pos0 = jnp.maximum(cache_pos, 0)           # -1 marks idle slots
     if positions is None:
-        positions = q_pos0 + jnp.arange(S)
-        if positions.ndim == 1:
-            positions = jnp.broadcast_to(positions, (B, S))
+        if getattr(q_pos0, "ndim", 0) == 1:          # per-slot (B,) positions
+            positions = q_pos0[:, None] + jnp.arange(S)
+        else:
+            positions = q_pos0 + jnp.arange(S)
+            if positions.ndim == 1:
+                positions = jnp.broadcast_to(positions, (B, S))
     if not a.learned_pos and cross_kv is None:
         from .embeddings import apply_rope
         q = apply_rope(q, positions, a.rope_theta)
@@ -218,7 +250,24 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
 
     new_cache = None
     kv_positions = None
-    if cache is not None and cross_kv is None:
+    if paged:
+        assert S == 1, "paged KV path is decode-only (S == 1)"
+        assert not window, "paged KV path serves linear caches only"
+        pool_k, pool_v = cache["k"], cache["v"]
+        page = pool_k.shape[1]
+        maxp = block_table.shape[1]
+        col = jnp.minimum(q_pos0 // page, maxp - 1)
+        pid = jnp.where(cache_pos >= 0,
+                        block_table[jnp.arange(B), col], 0)   # 0 = trash page
+        off = q_pos0 % page
+        pool_k = pool_k.at[pid, off].set(k[:, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[pid, off].set(v[:, 0].astype(pool_v.dtype))
+        new_cache = {"k": pool_k, "v": pool_v}
+        k = kops.paged_gather(pool_k, block_table)
+        v = kops.paged_gather(pool_v, block_table)
+        idx = jnp.arange(k.shape[1])[None, :]
+        kv_positions = jnp.where(idx <= cache_pos[:, None], idx, -1)
+    elif cache is not None and cross_kv is None:
         Smax = cache["k"].shape[1]
         if window and Smax <= window:                    # ring buffer (SWA)
             if S == 1:                                   # decode: single slot

@@ -67,9 +67,11 @@ class Model:
             cache_pos=0, frontend_embeds=batch.get("patches"))
         return logits, new_cache
 
-    def decode_step(self, params, tokens, cache, cache_pos) -> Tuple[jax.Array, Any]:
+    def decode_step(self, params, tokens, cache, cache_pos,
+                    block_table=None) -> Tuple[jax.Array, Any]:
         cfg = self.cfg
         if cfg.is_encoder_decoder:
+            assert block_table is None, "paged decode is decoder-LM only"
             logits, new_self, _ = encdec.decode(
                 params, tokens, None, cfg, mode="serve",
                 cache=cache["self"], cache_pos=cache_pos,
@@ -77,7 +79,7 @@ class Model:
             return logits, {"self": new_self, "cross": cache["cross"]}
         logits, _, new_cache = transformer.forward(
             params, tokens, cfg, mode="serve", cache=cache,
-            cache_pos=cache_pos)
+            cache_pos=cache_pos, block_table=block_table)
         return logits, new_cache
 
     def init_cache(self, batch: int, max_seq: int, dtype=None):

@@ -104,7 +104,8 @@ def init_block(key, kind: str, cfg: ArchConfig) -> Dict:
 
 
 def apply_block(params, x, kind: str, cfg: ArchConfig, *, mode: str,
-                cache=None, cache_pos=None, q_chunk: int, kv_chunk: int):
+                cache=None, cache_pos=None, q_chunk: int, kv_chunk: int,
+                block_table=None):
     """Returns (x, new_cache, aux)."""
     comp = cfg.compression
     aux = jnp.zeros((), jnp.float32)
@@ -114,7 +115,8 @@ def apply_block(params, x, kind: str, cfg: ArchConfig, *, mode: str,
         a, new_cache = attn_lib.attention_block(
             params["attn"], h, cfg=cfg, causal=True,
             window=_window_for(kind, cfg), cache=cache, cache_pos=cache_pos,
-            mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            block_table=block_table)
         if "ln1_post" in params:
             a = norm_lib.apply_norm(cfg.norm, params["ln1_post"], a)
         x = x + a
@@ -214,8 +216,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 def forward(params, tokens, cfg: ArchConfig, *, mode: str = "train",
             cache: Optional[List] = None, cache_pos=None,
             frontend_embeds=None, q_chunk: Optional[int] = None,
-            kv_chunk: Optional[int] = None):
-    """tokens: (B, S) int32.  Returns (logits, aux, new_cache)."""
+            kv_chunk: Optional[int] = None, block_table=None):
+    """tokens: (B, S) int32.  Returns (logits, aux, new_cache).
+
+    With ``block_table`` set, ``cache`` is a paged pool tree (attention
+    leaves {"k","v"} shaped (n, P, page, Hkv, D)) and ``cache_pos`` is the
+    per-slot (B,) position vector — see serve/kvcache.py.
+    """
     q_chunk = q_chunk or cfg.attn_q_chunk
     kv_chunk = kv_chunk or cfg.attn_kv_chunk
     segs = segments_for(cfg)
@@ -251,7 +258,8 @@ def forward(params, tokens, cfg: ArchConfig, *, mode: str = "train",
                 x_ = shard_act(x_)          # block-boundary sharding pin
                 x_, c_out, aux_b = apply_block(
                     bp, x_, kind, cfg, mode=mode, cache=c_in,
-                    cache_pos=cache_pos, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                    cache_pos=cache_pos, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                    block_table=block_table)
                 new_gc.append(c_out)
                 aux_ = aux_ + aux_b
             x_ = shard_act(x_)

@@ -33,8 +33,12 @@ def make_prefill_step(cfg: ArchConfig, logits_sharding=None) -> Callable:
 
 def make_decode_step(cfg: ArchConfig, sample: bool = False,
                      temperature: float = 1.0,
-                     logits_sharding=None) -> Callable:
+                     logits_sharding=None, seed: int = 0) -> Callable:
+    """Single-token decode step.  ``seed`` keys the sampling PRNG (folded
+    with the cache position), so sampled generations are reproducible per
+    engine and distinct across engines with different seeds."""
     model = build_model(cfg)
+    base_key = jax.random.PRNGKey(seed)
 
     def decode_step(params, tokens, cache, cache_pos):
         logits, new_cache = model.decode_step(params, tokens, cache,
@@ -42,7 +46,7 @@ def make_decode_step(cfg: ArchConfig, sample: bool = False,
         if logits_sharding is not None:
             logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
         if sample:
-            key = jax.random.fold_in(jax.random.PRNGKey(17), cache_pos)
+            key = jax.random.fold_in(base_key, cache_pos)
             nxt = jax.random.categorical(
                 key, logits[:, -1].astype(jnp.float32) / temperature, -1)
         else:
@@ -53,7 +57,7 @@ def make_decode_step(cfg: ArchConfig, sample: bool = False,
 
 def make_decode_loop(cfg: ArchConfig, steps: int, *, sample: bool = False,
                      temperature: float = 1.0, eos_id: Optional[int] = None,
-                     logits_sharding=None) -> Callable:
+                     logits_sharding=None, seed: int = 0) -> Callable:
     """Device-resident multi-token decode: one dispatch for ``steps`` tokens.
 
     The per-token step above runs inside a ``lax.while_loop`` whose carry
@@ -74,7 +78,7 @@ def make_decode_loop(cfg: ArchConfig, steps: int, *, sample: bool = False,
     sampled token (slot 0 of the buffer), ``pos0`` the prompt length.
     """
     step = make_decode_step(cfg, sample=sample, temperature=temperature,
-                            logits_sharding=logits_sharding)
+                            logits_sharding=logits_sharding, seed=seed)
     fill = 0 if eos_id is None else int(eos_id)
 
     def decode_loop(params, first_tok, cache, pos0, lengths):
@@ -103,4 +107,108 @@ def make_decode_loop(cfg: ArchConfig, steps: int, *, sample: bool = False,
         state = (jnp.int32(1), buf, first_tok, cache, done)
         _, buf, _, cache, _ = jax.lax.while_loop(cond_fn, body_fn, state)
         return buf, cache
+    return decode_loop
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous-batching builders (serve/kvcache.py + serve/scheduler.py)
+# ---------------------------------------------------------------------------
+def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
+                           page_size: int) -> Callable:
+    """B=1 exact-position prefill + page scatter, one dispatch per admission.
+
+    The prompt is right-padded to ``n_pages * page_size`` (a page-aligned
+    bucket, so a handful of page counts cover every prompt length — no
+    per-length recompiles).  Padding sits AFTER the prompt: causal masking
+    keeps positions < S bit-exact vs. an unpadded prefill, and the garbage
+    cache tail stays masked until decode overwrites it (position validity is
+    ``i <= slot position``).
+
+    Returns ``prefill_pack(params, batch, pool, pages, true_len)`` ->
+    ``(first_token scalar int32, pool)`` — the first token is the greedy
+    argmax at the prompt's true last position (same op the batch engine
+    runs on its prefill logits).
+    """
+    from . import kvcache as kvc
+    model = build_model(cfg)
+    spad = n_pages * page_size
+
+    def prefill_pack(params, batch, pool, pages, true_len):
+        cache = model.init_cache(1, spad, dtype=jnp.float32)
+        logits, dense = model.prefill(params, batch, cache)
+        last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
+                                            keepdims=False)
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        pool = kvc.pack_prefill_cache(pool, dense, pages, page_size)
+        return nxt, pool
+    return prefill_pack
+
+
+def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
+                           sample: bool = False, temperature: float = 1.0,
+                           eos_id: Optional[int] = None, seed: int = 0,
+                           logits_sharding=None) -> Callable:
+    """Device-resident decode over paged slots: one dispatch per ``chunk``.
+
+    The carry holds per-slot (token, position, remaining budget, done) —
+    every slot advances at ITS OWN position (RoPE + mask + page writes are
+    per-slot), so slots admitted at different times decode together in one
+    program.  A slot freezes when its budget hits zero or it emits
+    ``eos_id``; its writes route to the trash page (position -1) and its
+    buffer slots hold ``eos_id``/0.  The loop exits early once every slot
+    is frozen; the scheduler retires/refills slots between dispatches.
+
+    Returns ``decode_loop(params, cur, pool, table, pos, rem)`` ->
+    ``(buf (B, chunk) int32, cur, pool, pos, rem, done)``.
+    """
+    model = build_model(cfg)
+    base_key = jax.random.PRNGKey(seed)
+    fill = 0 if eos_id is None else int(eos_id)
+
+    def step(params, cur, pool, pos_masked, table):
+        logits, pool = model.decode_step(params, cur[:, None], pool,
+                                         pos_masked, block_table=table)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        if sample:
+            # fold in slot index AND position: slots at the same position
+            # (e.g. identical prompts admitted together) must not draw from
+            # identical PRNG noise
+            slots = jnp.arange(cur.shape[0])
+            keys = jax.vmap(lambda s, p: jax.random.fold_in(
+                jax.random.fold_in(base_key, s), p))(
+                slots, jnp.maximum(pos_masked, 0))
+            nxt = jax.vmap(lambda k, lg: jax.random.categorical(
+                k, lg.astype(jnp.float32) / temperature, -1))(
+                keys, logits[:, -1])
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return nxt.astype(jnp.int32), pool
+
+    def decode_loop(params, cur, pool, table, pos, rem):
+        B = cur.shape[0]
+        done0 = rem <= 0
+        buf = jnp.full((B, chunk), fill, jnp.int32)
+
+        def cond_fn(st):
+            return jnp.logical_and(st[0] < chunk, ~jnp.all(st[6]))
+
+        def body_fn(st):
+            j, buf_, cur_, pool_, pos_, rem_, done_ = st
+            masked = jnp.where(done_, -1, pos_)
+            nxt, pool_ = step(params, cur_, pool_, masked, table)
+            tok = jnp.where(done_, jnp.int32(fill), nxt)
+            buf_ = jax.lax.dynamic_update_slice(buf_, tok[:, None], (0, j))
+            pos_ = jnp.where(done_, pos_, pos_ + 1)
+            rem_ = jnp.where(done_, rem_, rem_ - 1)
+            nd = done_ | (rem_ <= 0)
+            if eos_id is not None:
+                nd = nd | (~done_ & (nxt == eos_id))
+            cur_ = jnp.where(done_, cur_, nxt)
+            return (j + 1, buf_, cur_, pool_, pos_, rem_, nd)
+
+        st = (jnp.int32(0), buf, cur, pool, pos, rem, done0)
+        _, buf, cur, pool, pos, rem, done = jax.lax.while_loop(
+            cond_fn, body_fn, st)
+        return buf, cur, pool, pos, rem, done
     return decode_loop

@@ -1,15 +1,30 @@
-"""Batched serving engine: continuous-batching-lite over prefill + decode.
+"""Serving engines: the batch-synchronous engine (oracle) and the
+continuous-batching engine over the paged KV pool.
 
-Requests are gathered into fixed-size batches (padding short prompts),
-prefilled once, then decoded by the DEVICE-RESIDENT loop in serve/decode.py:
-one dispatch per batch instead of one per token, with the cache donated
-through the loop.  Params are run through the offline spectral precompute
-pass (serve/params.py) at construction, so no weight FFT executes inside the
-decode program — the paper's offline-FFT'd weights, as a param-tree pass.
+``Engine`` gathers fixed-size batches (padding short prompts), prefills
+once, then decodes with the device-resident loop in serve/decode.py.  It is
+the bit-exact ORACLE: under a single-admission schedule (one request, B=1)
+its greedy tokens define what the continuous engine must emit.  Prompt
+bucketing (``bucket_prompts``) sorts requests by prompt length before
+chunking into batches, so a chunk of short prompts is no longer left-padded
+to an unrelated long prompt's length; results come back in request order.
 
-``decode_mode="per_token"`` keeps the seed per-token host loop (the baseline
-`benchmarks/bench_decode.py` measures against, and the oracle the scanned
-loop is tested bit-identical to).
+``ContinuousEngine`` is the paper's batch-processing + resource-re-use +
+hierarchical-control story as a serving control plane (see docs/serving.md):
+
+* KV state lives in a PAGED POOL (serve/kvcache.py) — fixed-size blocks,
+  per-request block tables, a free-list allocator; pages go back to the
+  pool the moment a request retires, not when its batch drains;
+* a request SCHEDULER (serve/scheduler.py) admits queued requests into
+  free decode slots under a token budget, BETWEEN device dispatches of the
+  scanned decode loop: prefill of waiting requests interleaves with decode
+  of running ones;
+* decode runs ``decode_chunk`` tokens per dispatch with per-slot positions
+  (serve/decode.py: make_paged_decode_loop); finished slots freeze
+  on-device and retire between dispatches without stalling the rest.
+
+Params run through the offline spectral precompute pass (serve/params.py)
+in both engines, so no weight FFT executes inside any serve program.
 """
 from __future__ import annotations
 
@@ -23,11 +38,14 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..dist import ctx as dist_ctx
+from ..dist import sharding as dist_sharding
 from ..launch import mesh as mesh_lib
 from ..models import transformer as tfm
 from ..models.registry import build_model
 from . import decode as dec
+from . import kvcache as kvc
 from .params import precompute_serving_params
+from .scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -41,7 +59,8 @@ class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_seq: int = 256, sample: bool = False, mesh=None,
                  precompute: bool = True, decode_mode: str = "scan",
-                 eos_id: Optional[int] = None, temperature: float = 1.0):
+                 eos_id: Optional[int] = None, temperature: float = 1.0,
+                 seed: int = 0, bucket_prompts: bool = True):
         assert decode_mode in ("scan", "per_token"), decode_mode
         self.cfg = cfg
         self.params = (precompute_serving_params(params, cfg)
@@ -53,6 +72,8 @@ class Engine:
         self.decode_mode = decode_mode
         self.eos_id = eos_id
         self.temperature = temperature
+        self.seed = seed
+        self.bucket_prompts = bucket_prompts
         # Largest sliding window any block uses: the ring-buffer prefill
         # keeps the window tail, so batch prompts must cover it (validated
         # per batch below instead of failing as a trace-time assert).
@@ -65,9 +86,13 @@ class Engine:
         self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh()
         self._prefill = jax.jit(dec.make_prefill_step(cfg))
         self._decode = jax.jit(
-            dec.make_decode_step(cfg, sample=sample, temperature=temperature),
+            dec.make_decode_step(cfg, sample=sample, temperature=temperature,
+                                 seed=seed),
             donate_argnums=(2,))
         self._loops: Dict[int, object] = {}
+        self._stats = {"requests": 0, "batches": 0, "tokens": 0,
+                       "prompt_tokens": 0, "padded_prompt_tokens": 0,
+                       "prefill_s": 0.0, "decode_s": 0.0}
 
     def _loop_fn(self, steps: int):
         """jit'd decode loop for a step budget (cached per budget)."""
@@ -75,7 +100,8 @@ class Engine:
         if fn is None:
             fn = jax.jit(dec.make_decode_loop(
                 self.cfg, steps, sample=self.sample,
-                temperature=self.temperature, eos_id=self.eos_id),
+                temperature=self.temperature, eos_id=self.eos_id,
+                seed=self.seed),
                 donate_argnums=(2,))
             self._loops[steps] = fn
         return fn
@@ -96,10 +122,24 @@ class Engine:
         return batch
 
     def generate(self, reqs: Sequence[Request]) -> List[Dict]:
-        """Serve a batch of requests; returns per-request token lists."""
-        out: List[Dict] = []
-        for i in range(0, len(reqs), self.max_batch):
-            out.extend(self._generate_batch(reqs[i:i + self.max_batch]))
+        """Serve a batch of requests; returns per-request token lists in
+        request order.  With ``bucket_prompts`` (default), requests are
+        grouped into batches by (prompt length, decode budget) first, so a
+        chunk of short prompts is not left-padded to an unrelated long
+        prompt's length — and short decodes are not held hostage by a
+        batch-mate's long budget (the decode loop runs to the chunk max)."""
+        if self.bucket_prompts:
+            order = sorted(range(len(reqs)),
+                           key=lambda i: (len(reqs[i].prompt),
+                                          reqs[i].max_new_tokens))
+        else:
+            order = list(range(len(reqs)))
+        out: List[Optional[Dict]] = [None] * len(reqs)
+        for i in range(0, len(order), self.max_batch):
+            idxs = order[i:i + self.max_batch]
+            for j, r in zip(idxs, self._generate_batch([reqs[j]
+                                                        for j in idxs])):
+                out[j] = r
         return out
 
     def _generate_batch(self, reqs: Sequence[Request]) -> List[Dict]:
@@ -156,6 +196,14 @@ class Engine:
                 "decode_s": decode_s,
                 "latency_s": prefill_s + decode_s,
             })
+        st = self._stats
+        st["requests"] += len(reqs)
+        st["batches"] += 1
+        st["tokens"] += sum(r["decode_len"] for r in out)
+        st["prompt_tokens"] += sum(len(r.prompt) for r in reqs)
+        st["padded_prompt_tokens"] += B * S
+        st["prefill_s"] += prefill_s
+        st["decode_s"] += decode_s
         return out
 
     def _decode_per_token(self, nxt, cache, S: int, steps: int) -> np.ndarray:
@@ -166,3 +214,236 @@ class Engine:
                                          jnp.int32(pos))
             toks.append(nxt)
         return np.asarray(jnp.stack(toks, 1))          # (B, steps)
+
+    def stats(self) -> Dict:
+        """Cumulative engine telemetry (tokens, prefill/decode split, and
+        the prompt-padding waste the bucketing satellite targets)."""
+        st = dict(self._stats)
+        st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
+                                  - st["prompt_tokens"])
+        # same denominator as ContinuousEngine.stats(): end-to-end serve time
+        st["tokens_per_s"] = st["tokens"] / max(
+            st["prefill_s"] + st["decode_s"], 1e-9)
+        return st
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged pool
+# ---------------------------------------------------------------------------
+class ContinuousEngine:
+    """Continuous-batching engine: paged KV pool + token-budget scheduler.
+
+    Serves decoder-LM archs with linear (global-attention) caches — see
+    ``kvcache.servable_reasons``; SWA/recurrent/enc-dec archs stay on the
+    batch engine.  Greedy outputs are token-identical to the batch engine
+    run per-request (B=1): prefill is exact-position (right-pad bucketed),
+    decode runs every slot at its own absolute position.
+
+    ``generate(reqs, arrival_times=...)`` simulates an online arrival
+    process against wall-clock time (benchmarks); without arrival times the
+    whole list queues at t=0 and drains under the admission policy.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_seq: int = 256, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_tokens_in_flight: Optional[int] = None,
+                 decode_chunk: int = 8, sample: bool = False,
+                 temperature: float = 1.0, seed: int = 0,
+                 eos_id: Optional[int] = None, mesh=None,
+                 precompute: bool = True):
+        reasons = kvc.servable_reasons(cfg)
+        if reasons:
+            raise ValueError(f"{cfg.name} is not continuous-servable: "
+                             f"{'; '.join(reasons)} — use Engine")
+        self.cfg = cfg
+        self.params = (precompute_serving_params(params, cfg)
+                       if precompute else params)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.decode_chunk = decode_chunk
+        self.sample = sample
+        self.eos_id = eos_id
+        self.max_pages_per_slot = kvc.pages_for(max_seq, page_size)
+        if num_pages is None:
+            num_pages = max_slots * self.max_pages_per_slot + 1
+        if num_pages < self.max_pages_per_slot + 1:
+            raise ValueError(f"num_pages {num_pages} cannot hold one "
+                             f"max_seq request (+trash page)")
+        if max_tokens_in_flight is None:
+            max_tokens_in_flight = max_slots * (max_seq + 1)
+        if max_tokens_in_flight < max_seq + 1:
+            raise ValueError(f"max_tokens_in_flight {max_tokens_in_flight} "
+                             f"cannot admit one max_seq request")
+        self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh()
+        # keep the page dim DP-divisible, else page_pool_spec's fallback
+        # would replicate the whole pool over the data-parallel devices
+        num_pages = dist_sharding.dp_round_up(num_pages, self.mesh)
+        self.num_pages = num_pages
+        self.pool = kvc.build_pool(cfg, num_pages, page_size)
+        # pin the pool to its derived layout (pages over DP, heads over
+        # "model" — the dense cache's placement, see dist/sharding.py);
+        # trivial on the 1-device host mesh, load-bearing on real meshes
+        self.pool = jax.device_put(self.pool, dist_sharding.to_shardings(
+            dist_sharding.pool_specs(self.pool, self.mesh), self.mesh))
+        self.block_table = kvc.BlockTable(
+            kvc.PageAllocator(num_pages), max_slots, page_size,
+            self.max_pages_per_slot)
+        self.scheduler = Scheduler(self.block_table, max_seq=max_seq,
+                                   max_tokens_in_flight=max_tokens_in_flight)
+        # ONE fixed-size decode program: chunk size never varies, so the
+        # loop compiles exactly once — adaptive sizing would dodge some
+        # frozen-slot steps but risks multi-second mid-serving compiles the
+        # first time an unseen size comes up (disastrous for tail latency)
+        self._loop = jax.jit(dec.make_paged_decode_loop(
+            cfg, decode_chunk, sample=sample, temperature=temperature,
+            eos_id=eos_id, seed=seed), donate_argnums=(2,))
+        self._prefills: Dict[int, object] = {}
+        self._cur = np.zeros(max_slots, np.int32)
+        self._pos = np.zeros(max_slots, np.int32)
+        self._rem = np.zeros(max_slots, np.int32)
+        self._dev_table = None              # device copy; None = stale
+        self._stats = {"requests": 0, "tokens": 0, "prompt_tokens": 0,
+                       "padded_prompt_tokens": 0, "prefill_s": 0.0,
+                       "decode_s": 0.0, "decode_dispatches": 0}
+
+    # -- jit caches -------------------------------------------------------
+    def _prefill_fn(self, n_pages: int):
+        fn = self._prefills.get(n_pages)
+        if fn is None:
+            fn = jax.jit(dec.make_prefill_pack_step(
+                self.cfg, n_pages, self.page_size), donate_argnums=(2,))
+            self._prefills[n_pages] = fn
+        return fn
+
+    # -- serving loop -----------------------------------------------------
+    def generate(self, reqs: Sequence[Request],
+                 arrival_times: Optional[Sequence[float]] = None
+                 ) -> List[Dict]:
+        for r in reqs:                      # validate BEFORE admitting any:
+            if len(r.prompt) > self.max_seq:   # a mid-loop raise would leak
+                raise ValueError(              # running slots' pages
+                    f"prompt length {len(r.prompt)} exceeds max_seq "
+                    f"{self.max_seq}")
+        t_start = time.perf_counter()
+        arr = ([0.0] * len(reqs) if arrival_times is None
+               else [float(a) for a in arrival_times])
+        orders = [self.scheduler.submit(r, a) for r, a in zip(reqs, arr)]
+        results: Dict[int, Dict] = {}
+        gate = arrival_times is not None
+        with dist_ctx.activation_policy(self.mesh):
+            while not self.scheduler.idle:
+                now = time.perf_counter() - t_start
+                if gate and not self.scheduler.running:
+                    # engine idle: sleep until the HEAD's arrival (admission
+                    # is strictly FIFO, so the head's arrival is the binding
+                    # one even when arrival times are unsorted)
+                    next_arr = self.scheduler.queue[0][2]
+                    if next_arr > now:
+                        time.sleep(next_arr - now)
+                        now = time.perf_counter() - t_start
+                admitted = self.scheduler.try_admit(
+                    now, arrived_before=now if gate else None)
+                for slot in admitted:
+                    self._prefill_slot(slot, results, t_start)
+                if self.scheduler.running:
+                    self._dispatch_decode(results, t_start)
+                elif self.scheduler.queue and not admitted:
+                    raise RuntimeError(
+                        "scheduler stall: queued request cannot be admitted "
+                        "into an idle engine (budget/pool too small)")
+        return [results[o] for o in orders]
+
+    def _prefill_slot(self, slot, results: Dict, t_start: float) -> None:
+        t0 = time.perf_counter()
+        self._dev_table = None              # admission reserved pages
+        req = slot.request
+        S = len(req.prompt)
+        n_pages = kvc.pages_for(S, self.page_size)
+        spad = n_pages * self.page_size
+        toks = np.zeros(spad, np.int32)
+        toks[:S] = req.prompt                          # right-pad
+        batch = {"tokens": jnp.asarray(toks[None])}
+        if self.cfg.frontend == "vision_stub":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_patches, self.cfg.d_model), jnp.float32)
+        pages = jnp.asarray(self.block_table.pages(slot.index)[:n_pages],
+                            jnp.int32)
+        nxt, self.pool = self._prefill_fn(n_pages)(
+            self.params, batch, self.pool, pages, jnp.int32(S))
+        first = int(nxt)
+        slot.tokens.append(first)
+        slot.pos = S                       # position of the token in flight
+        slot.budget -= 1
+        self._cur[slot.index] = first
+        self._pos[slot.index] = S
+        self._rem[slot.index] = slot.budget
+        dt = time.perf_counter() - t0
+        self._stats["prefill_s"] += dt
+        self._stats["prompt_tokens"] += S
+        self._stats["padded_prompt_tokens"] += spad
+        slot.prefill_s = dt
+        if slot.budget <= 0 or (self.eos_id is not None
+                                and first == self.eos_id):
+            self._rem[slot.index] = 0
+            self._finish(slot, results, t_start)
+
+    def _dispatch_decode(self, results: Dict, t_start: float) -> None:
+        t0 = time.perf_counter()
+        rem_before = self._rem.copy()
+        if self._dev_table is None:         # tables change only on
+            self._dev_table = self.block_table.device_table()   # admit/retire
+        buf, cur, self.pool, pos, rem, done = self._loop(
+            self.params, jnp.asarray(self._cur), self.pool,
+            self._dev_table, jnp.asarray(self._pos),
+            jnp.asarray(self._rem))
+        buf = np.asarray(buf)
+        self._cur = np.array(cur)
+        self._pos = np.array(pos)
+        self._rem = np.array(rem)
+        done = np.asarray(done)
+        dt = time.perf_counter() - t0
+        self._stats["decode_s"] += dt
+        self._stats["decode_dispatches"] += 1
+        for slot in list(self.scheduler.running):
+            b = slot.index
+            n = int(rem_before[b] - self._rem[b])
+            if n:
+                slot.tokens.extend(buf[b, :n].tolist())
+                slot.pos = int(self._pos[b])
+                self._stats["tokens"] += n
+            if done[b]:
+                self._finish(slot, results, t_start)
+
+    def _finish(self, slot, results: Dict, t_start: float) -> None:
+        now = time.perf_counter() - t_start
+        prefill_s = getattr(slot, "prefill_s", 0.0)
+        arrival, admit = slot.arrival_s, slot.admit_s
+        res = self.scheduler.retire(slot)   # releases the slot's pages
+        self._dev_table = None
+        decode_s = max(now - admit - prefill_s, 0.0)
+        res.update({
+            "tokens_per_s": res["decode_len"] / max(decode_s, 1e-9),
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            "queue_s": max(admit - arrival, 0.0),
+            "latency_s": max(now - arrival, 0.0),
+        })
+        self._stats["requests"] += 1
+        self._stats["tokens"] += 1          # the prefill-emitted first token
+        results[res.pop("order")] = res
+
+    # -- telemetry --------------------------------------------------------
+    def stats(self) -> Dict:
+        """Engine + scheduler telemetry: queue depth, in-flight tokens,
+        page-pool utilization, prefill/decode split, pool footprint."""
+        st = dict(self._stats)
+        st.update(self.scheduler.stats())
+        st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
+                                  - st["prompt_tokens"])
+        st["tokens_per_s"] = st["tokens"] / max(
+            st["prefill_s"] + st["decode_s"], 1e-9)
+        st["pool_bytes"] = kvc.pool_bytes(self.pool)
+        st["prefill_buckets"] = sorted(self._prefills)
+        return st

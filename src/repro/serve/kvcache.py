@@ -1,0 +1,226 @@
+"""Paged KV-cache pool: fixed-size blocks, per-request block tables, and a
+free-list allocator.
+
+The paper's accelerator wins its throughput by keeping the compute units fed
+— batch processing + resource re-use under a hierarchical controller.  The
+dense serving cache breaks that on the memory side: every request owns a
+``(max_seq, Hkv, D)`` slab per layer until the *slowest* request in its
+batch finishes.  This module replaces the slab with vLLM-style paging:
+
+* the pool is one ``(num_pages, page_size, Hkv, D)`` tensor per attention
+  layer (stacked over scan groups like the dense cache it replaces),
+* a request owns an ordered list of page ids; position ``i`` lives at page
+  ``table[i // page_size]``, offset ``i % page_size``,
+* pages come from a host-side free list, are RESERVED up front for a
+  request's worst case (prompt + budget — admission can never deadlock
+  mid-decode), and go back to the free list the moment the request
+  retires (EOS / budget), not when its batch drains.
+
+Page id 0 is the TRASH page: never allocated, it absorbs the masked writes
+of idle/frozen decode slots (see layers/attention.py paged branch).
+
+Host bookkeeping (``PageAllocator`` / ``BlockTable``) is pure python so the
+scheduler invariants are hypothesis-testable without a device; the device
+pool is a plain pytree built by ``build_pool`` and threaded through the
+decode loop like the dense cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.registry import build_model
+
+TRASH_PAGE = 0
+
+
+def pages_for(n_positions: int, page_size: int) -> int:
+    """Pages needed to hold ``n_positions`` cache slots."""
+    return max(1, -(-int(n_positions) // page_size))
+
+
+class PageAllocator:
+    """LIFO free-list over ``num_pages`` pages; page 0 (trash) is reserved.
+
+    ``alloc`` returns None instead of raising when the pool is exhausted —
+    the scheduler treats that as "request stays queued".
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is the trash)")
+        self.num_pages = int(num_pages)
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self._held: set = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double free / foreign page {p}")
+            self._held.discard(p)
+            self._free.append(p)
+
+
+class BlockTable:
+    """Per-slot page ownership over a shared allocator.
+
+    Rows are dense ``(max_slots, max_pages_per_slot)`` int32 (device-ready);
+    unowned entries hold TRASH_PAGE.  ``reserve`` grows a slot's mapping to
+    cover ``n_positions`` cache slots (False = pool exhausted, nothing
+    changes); ``release`` returns every page of a slot to the free list.
+    """
+
+    def __init__(self, allocator: PageAllocator, max_slots: int,
+                 page_size: int, max_pages_per_slot: int):
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self.max_pages_per_slot = int(max_pages_per_slot)
+        self.table = np.full((max_slots, max_pages_per_slot), TRASH_PAGE,
+                             np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(max_slots)]
+
+    def reserve(self, slot: int, n_positions: int) -> bool:
+        need = pages_for(n_positions, self.page_size)
+        if need > self.max_pages_per_slot:
+            raise ValueError(
+                f"request needs {need} pages > max_pages_per_slot "
+                f"{self.max_pages_per_slot} (raise max_seq/page budget)")
+        extra = need - len(self.owned[slot])
+        if extra <= 0:
+            return True
+        pages = self.allocator.alloc(extra)
+        if pages is None:
+            return False
+        start = len(self.owned[slot])
+        self.owned[slot].extend(pages)
+        self.table[slot, start:start + extra] = pages
+        return True
+
+    def release(self, slot: int) -> None:
+        if self.owned[slot]:
+            self.allocator.free(self.owned[slot])
+        self.owned[slot] = []
+        self.table[slot, :] = TRASH_PAGE
+
+    def pages(self, slot: int) -> List[int]:
+        return list(self.owned[slot])
+
+    def device_table(self) -> jax.Array:
+        return jnp.asarray(self.table)
+
+    def utilization(self) -> float:
+        usable = self.allocator.num_pages - 1
+        return self.allocator.in_use / max(usable, 1)
+
+
+# ---------------------------------------------------------------------------
+# Device pool construction + prefill packing
+# ---------------------------------------------------------------------------
+def _is_kv_leaf(node: Any) -> bool:
+    return isinstance(node, dict) and "k" in node and "v" in node
+
+
+def servable_reasons(cfg: ArchConfig) -> List[str]:
+    """Why a config can NOT be served by the paged continuous engine.
+
+    Paged serving needs per-slot positions and linear KV caches: sliding
+    windows (ring buffers), recurrent state (position-free but prefill is
+    not right-pad safe), learned positions, and encoder-decoder stacks stay
+    on the batch engine.  Empty list = servable.
+    """
+    from ..models import transformer as tfm
+    reasons = []
+    if cfg.is_encoder_decoder:
+        reasons.append("encoder-decoder (cross-attention cache)")
+    if cfg.attention.learned_pos or cfg.max_position:
+        reasons.append("learned positions (scalar-position table lookup)")
+    kinds = {k for pattern, _ in tfm.segments_for(cfg) for k in pattern}
+    bad = kinds - {"attn", "moe"}
+    if bad:
+        reasons.append(f"block kinds {sorted(bad)} (sliding-window ring "
+                       f"buffers / recurrent state)")
+    return reasons
+
+
+def build_pool(cfg: ArchConfig, num_pages: int, page_size: int,
+               dtype=jnp.float32):
+    """Paged pool pytree mirroring ``model.init_cache``'s structure.
+
+    Every attention cache leaf ``{"k": (n, B, S, Hkv, D), "v": ..., "pos"}``
+    becomes ``{"k": (n, num_pages, page_size, Hkv, D), "v": ...}`` — one
+    shared pool per layer, indexed by the same block table at every layer
+    (a logical page id is valid for the whole stack).  The "pos" leaf is
+    dropped: validity is carried by the per-slot position vector.
+    """
+    if servable_reasons(cfg):
+        raise ValueError(f"{cfg.name}: not paged-servable: "
+                         f"{'; '.join(servable_reasons(cfg))}")
+    struct = jax.eval_shape(
+        lambda: build_model(cfg).init_cache(1, page_size, dtype=dtype))
+
+    def transform(node):
+        if _is_kv_leaf(node):
+            n, _, _, hkv, d = node["k"].shape
+            shape = (n, num_pages, page_size, hkv, d)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if isinstance(node, dict):
+            return {k: transform(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(transform(v) for v in node)
+        raise ValueError(f"unexpected cache leaf {node!r} in paged pool")
+
+    return transform(struct)
+
+
+def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int):
+    """Scatter a B=1 dense prefill cache into a slot's reserved pages.
+
+    ``dense_cache`` leaves are (n, 1, Spad, Hkv, D) with Spad a multiple of
+    ``page_size``; ``pages`` is (Spad // page_size,) int32.  Pure function
+    (jit with the pool donated); returns the updated pool tree.
+    """
+    def pack(pnode, dnode):
+        if _is_kv_leaf(pnode):
+            out = {}
+            for key in ("k", "v"):
+                leaf = dnode[key]                       # (n, 1, Spad, H, D)
+                n, _, spad, hkv, d = leaf.shape
+                npg = spad // page_size
+                vals = leaf.reshape(n, npg, page_size, hkv, d)
+                vals = vals.astype(pnode[key].dtype)
+                out[key] = pnode[key].at[:, pages].set(vals)
+            return out
+        if isinstance(pnode, dict):
+            return {k: pack(v, dnode[k]) for k, v in pnode.items()}
+        if isinstance(pnode, (list, tuple)):
+            return type(pnode)(pack(v, d) for v, d in zip(pnode, dnode))
+        raise ValueError(f"unexpected pool node {pnode!r}")
+
+    return pack(pool, dense_cache)
+
+
+def pool_bytes(pool) -> int:
+    """Total bytes of the device pool (telemetry)."""
+    return sum(int(leaf.size) * np.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(pool))

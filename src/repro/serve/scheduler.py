@@ -1,0 +1,176 @@
+"""Continuous-batching request scheduler: token-budget admission over decode
+slots, between device dispatches.
+
+Pure host logic (no jax): the ContinuousEngine consults it between
+dispatches of the scanned decode loop.  The hierarchy mirrors the paper's
+hardware control stack — a tiny control plane (queue + slot states + block
+tables) steering a large data plane (the paged pool + the device loop):
+
+* requests queue FIFO; admission happens only between device dispatches,
+  into slots whose previous request retired (no batch-drain barrier),
+* a request is admitted when (a) a slot is free, (b) the in-flight token
+  budget ``max_tokens_in_flight`` covers its worst case (prompt + budget),
+  and (c) the page pool can RESERVE its worst-case footprint up front —
+  so a running request can never stall waiting for a page,
+* retirement (EOS / budget / cache bound) releases the slot AND its pages
+  immediately; the rest of the batch never waits.
+
+Admission is strictly FIFO (no head-of-line skipping): a large request at
+the head blocks later small ones, trading a little throughput for no
+starvation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .kvcache import BlockTable, pages_for
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One decode slot's in-flight request (None = free)."""
+    index: int
+    request: object = None            # engine-level Request
+    order: int = -1                   # submission index (result ordering)
+    pos: int = 0                      # next cache position (= tokens seen)
+    budget: int = 0                   # decode steps still allowed
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    arrival_s: float = 0.0
+    admit_s: float = 0.0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Scheduler:
+    """FIFO token-budget admission + slot lifecycle over a BlockTable."""
+
+    def __init__(self, table: BlockTable, *, max_seq: int,
+                 max_tokens_in_flight: int):
+        self.table = table
+        self.max_seq = int(max_seq)
+        self.max_tokens_in_flight = int(max_tokens_in_flight)
+        self.slots = [SlotState(i) for i in range(table.table.shape[0])]
+        self.queue: Deque[Tuple[int, object, float]] = deque()
+        self.tokens_in_flight = 0
+        self.submitted = 0
+        self.admitted = 0
+        self.retired = 0
+        self.peak_tokens_in_flight = 0
+        self.peak_pages_in_use = 0
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, request, arrival_s: float = 0.0) -> int:
+        """Queue a request; returns its submission order index."""
+        order = self.submitted
+        self.queue.append((order, request, arrival_s))
+        self.submitted += 1
+        return order
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def running(self) -> List[SlotState]:
+        return [s for s in self.slots if not s.free]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s.free for s in self.slots)
+
+    # -- admission --------------------------------------------------------
+    def _clamped_budget(self, request) -> int:
+        """Decode budget clamped against the cache bound exactly like the
+        batch engine: step j writes position S + j - 1, so at most
+        ``max_seq - S + 1`` steps fit."""
+        s = len(request.prompt)
+        return max(1, min(request.max_new_tokens, self.max_seq - s + 1))
+
+    def _footprint(self, request) -> Tuple[int, int]:
+        """(worst-case tokens, worst-case cache positions) for a request."""
+        s = len(request.prompt)
+        steps = self._clamped_budget(request)
+        page = self.table.page_size
+        spad = pages_for(s, page) * page          # right-pad prefill bucket
+        return s + steps, max(spad, s + steps - 1)
+
+    def try_admit(self, now_s: float = 0.0,
+                  arrived_before: Optional[float] = None):
+        """Admit queued requests FIFO into free slots; yields filled slots.
+
+        Stops at the first request that does not fit (budget or pages) —
+        order is preserved, nothing is skipped.  ``arrived_before`` gates
+        admission on simulated arrival times (benchmarks).
+        """
+        out: List[SlotState] = []
+        free = deque(s for s in self.slots if s.free)
+        while self.queue and free:
+            order, req, arrival = self.queue[0]
+            if arrived_before is not None and arrival > arrived_before:
+                break
+            tokens, positions = self._footprint(req)
+            if len(req.prompt) > self.max_seq:
+                raise ValueError(f"prompt length {len(req.prompt)} exceeds "
+                                 f"max_seq {self.max_seq}")
+            if self.tokens_in_flight + tokens > self.max_tokens_in_flight:
+                break
+            slot = free[0]
+            if not self.table.reserve(slot.index, positions):
+                break                              # pool exhausted: wait
+            free.popleft()
+            self.queue.popleft()
+            slot.request = req
+            slot.order = order
+            slot.pos = len(req.prompt)
+            slot.budget = self._clamped_budget(req)
+            slot.tokens = []
+            slot.arrival_s = arrival
+            slot.admit_s = now_s
+            self.tokens_in_flight += tokens
+            self.admitted += 1
+            out.append(slot)
+        self.peak_tokens_in_flight = max(self.peak_tokens_in_flight,
+                                         self.tokens_in_flight)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.table.allocator.in_use)
+        return out
+
+    # -- retirement -------------------------------------------------------
+    def retire(self, slot: SlotState) -> Dict:
+        """Free the slot + its pages; returns the per-request result core."""
+        assert not slot.free, f"retiring free slot {slot.index}"
+        tokens, _ = self._footprint(slot.request)
+        self.tokens_in_flight -= tokens
+        self.table.release(slot.index)
+        result = {
+            "id": slot.request.id,
+            "order": slot.order,
+            "tokens": list(slot.tokens),
+            "decode_len": len(slot.tokens),
+        }
+        slot.request = None
+        slot.order = -1
+        slot.tokens = []
+        slot.pos = 0
+        slot.budget = 0
+        self.retired += 1
+        return result
+
+    # -- telemetry --------------------------------------------------------
+    def stats(self) -> Dict:
+        return {
+            "queue_depth": self.queue_depth,
+            "running": len(self.running),
+            "tokens_in_flight": self.tokens_in_flight,
+            "peak_tokens_in_flight": self.peak_tokens_in_flight,
+            "pages_in_use": self.table.allocator.in_use,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "page_utilization": self.table.utilization(),
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "retired": self.retired,
+        }

@@ -1,0 +1,184 @@
+"""Continuous-batching scheduler: FIFO token-budget admission, slot
+lifecycle, and full-restoration invariants under randomized schedules."""
+import numpy as np
+import pytest
+
+from repro.serve import kvcache as kvc
+from repro.serve.engine import Request
+from repro.serve.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def make_sched(*, slots=4, page=4, maxp=8, num_pages=None, max_seq=32,
+               budget=None):
+    num_pages = num_pages if num_pages is not None else slots * maxp + 1
+    table = kvc.BlockTable(kvc.PageAllocator(num_pages), slots, page, maxp)
+    return Scheduler(table, max_seq=max_seq,
+                     max_tokens_in_flight=budget or slots * (max_seq + 1))
+
+
+def req(s, new, rid=0):
+    return Request(prompt=np.arange(s, dtype=np.int32) + 1,
+                   max_new_tokens=new, id=rid)
+
+
+# ---------------------------------------------------------------------------
+# Directed tests
+# ---------------------------------------------------------------------------
+def test_fifo_admission_into_free_slots():
+    sched = make_sched(slots=2)
+    for i in range(4):
+        sched.submit(req(8, 4, rid=i))
+    admitted = sched.try_admit()
+    assert [s.request.id for s in admitted] == [0, 1]
+    assert sched.queue_depth == 2
+    assert not sched.try_admit()            # no free slot
+    res = sched.retire(admitted[0])
+    assert res["id"] == 0
+    nxt = sched.try_admit()
+    assert [s.request.id for s in nxt] == [2]    # FIFO, into the freed slot
+
+
+def test_token_budget_gates_admission():
+    sched = make_sched(slots=4, budget=30)
+    sched.submit(req(8, 6))                 # footprint 14
+    sched.submit(req(8, 6))                 # 28 total
+    sched.submit(req(8, 6))                 # would exceed 30
+    admitted = sched.try_admit()
+    assert len(admitted) == 2 and sched.tokens_in_flight == 28
+    sched.retire(admitted[0])
+    assert sched.tokens_in_flight == 14
+    assert len(sched.try_admit()) == 1
+
+
+def test_page_exhaustion_blocks_head_without_skipping():
+    # 5 usable pages, page_size 4: a 17-position request needs 5 pages
+    sched = make_sched(slots=2, page=4, maxp=5, num_pages=6, max_seq=20)
+    sched.submit(req(16, 2, rid=0))         # 16 prompt + 1 -> 17 pos, 5 pages
+    sched.submit(req(4, 2, rid=1))          # would fit 1 page — must NOT skip
+    admitted = sched.try_admit()
+    assert [s.request.id for s in admitted] == [0]
+    assert not sched.try_admit()            # head (id=1) blocked: 0 pages free
+    sched.retire(admitted[0])
+    assert [s.request.id for s in sched.try_admit()] == [1]
+
+
+def test_budget_clamped_to_cache_bound():
+    sched = make_sched(max_seq=16)
+    sched.submit(req(12, 50))
+    slot = sched.try_admit()[0]
+    assert slot.budget == 16 - 12 + 1       # batch-engine clamp rule
+
+
+def test_arrival_gating():
+    sched = make_sched()
+    sched.submit(req(8, 4), arrival_s=1.0)
+    assert not sched.try_admit(0.5, arrived_before=0.5)
+    assert len(sched.try_admit(1.5, arrived_before=1.5)) == 1
+
+
+def test_prompt_longer_than_max_seq_raises():
+    sched = make_sched(max_seq=8)
+    sched.submit(req(12, 2))
+    with pytest.raises(ValueError, match="max_seq"):
+        sched.try_admit()
+
+
+def test_stats_shape():
+    sched = make_sched()
+    sched.submit(req(8, 4))
+    sched.try_admit()
+    st = sched.stats()
+    for key in ("queue_depth", "running", "tokens_in_flight",
+                "pages_in_use", "page_utilization", "submitted",
+                "admitted", "retired", "peak_tokens_in_flight"):
+        assert key in st
+    assert st["running"] == 1 and st["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Randomized schedule invariants
+# ---------------------------------------------------------------------------
+def _run_schedule(slots, page, maxp, max_seq, budget, reqs, steps_draw):
+    """Drive submit/admit/decode/retire; check invariants at every step:
+
+    * admissions strictly FIFO, never more running than slots;
+    * token budget respected; no page owned by two slots;
+    * every request eventually retires with exactly its clamped budget of
+      tokens; the free list and tables are fully restored at the end.
+    """
+    num_pages = slots * maxp + 1
+    sched = make_sched(slots=slots, page=page, maxp=maxp,
+                       num_pages=num_pages, max_seq=max_seq, budget=budget)
+    for i, r in enumerate(reqs):
+        sched.submit(r)
+    admitted_order = []
+    retired = {}
+    guard = 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 10_000, "schedule did not converge"
+        for slot in sched.try_admit():
+            admitted_order.append(slot.request.id)
+            assert sched.tokens_in_flight <= sched.max_tokens_in_flight
+        running = sched.running
+        assert len(running) <= slots
+        owned = [set(sched.table.pages(s.index)) for s in running]
+        for i in range(len(owned)):
+            for j in range(i + 1, len(owned)):
+                assert not owned[i] & owned[j]
+        if not running:
+            assert not sched.queue, "stalled with work queued"
+            break
+        # emulate a decode chunk: each running slot emits some tokens
+        for slot in list(running):
+            emit = min(steps_draw(slot), slot.budget - len(slot.tokens))
+            slot.tokens.extend([7] * emit)
+            if len(slot.tokens) >= slot.budget:
+                res = sched.retire(slot)
+                retired[res["id"]] = res
+    assert admitted_order == [r.id for r in reqs]      # strict FIFO
+    assert set(retired) == {r.id for r in reqs}
+    for r in reqs:
+        clamp = max(1, min(r.max_new_tokens, max_seq - len(r.prompt) + 1))
+        assert retired[r.id]["decode_len"] == clamp
+    assert sched.tokens_in_flight == 0
+    assert sched.table.allocator.available == num_pages - 1
+    assert (sched.table.table == kvc.TRASH_PAGE).all()
+
+
+def test_randomized_schedules():
+    rng = np.random.RandomState(0)
+    for _ in range(40):
+        slots = int(rng.randint(1, 5))
+        page = int(rng.choice([2, 4, 8]))
+        maxp = int(rng.randint(2, 8))
+        max_seq = page * maxp
+        n = int(rng.randint(1, 12))
+        reqs = [req(int(rng.randint(1, max_seq + 1)),
+                    int(rng.randint(1, 20)), rid=i) for i in range(n)]
+        _run_schedule(slots, page, maxp, max_seq,
+                      slots * (max_seq + 1), reqs,
+                      lambda slot: int(rng.randint(1, 9)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_schedule_invariants_hypothesis(data):
+        slots = data.draw(st.integers(1, 4))
+        page = data.draw(st.sampled_from([2, 4, 8]))
+        maxp = data.draw(st.integers(2, 7))
+        max_seq = page * maxp
+        reqs = [req(data.draw(st.integers(1, max_seq)),
+                    data.draw(st.integers(1, 20)), rid=i)
+                for i in range(data.draw(st.integers(1, 10)))]
+        chunk = data.draw(st.integers(1, 8))
+        _run_schedule(slots, page, maxp, max_seq, slots * (max_seq + 1),
+                      reqs, lambda slot: chunk)
