@@ -9,7 +9,8 @@ import sys
 import time
 
 from . import (bench_accuracy_tradeoff, bench_complexity, bench_compression,
-               bench_decoupling, bench_equiv_ops, bench_throughput)
+               bench_decoupling, bench_equiv_ops, bench_paged_attention,
+               bench_serving, bench_throughput)
 
 ALL = {
     "compression": bench_compression.main,        # paper Fig. 3
@@ -18,6 +19,12 @@ ALL = {
     "complexity": bench_complexity.main,          # O(n log n) claim
     "decoupling": bench_decoupling.main,          # FFT/IFFT decoupling
     "accuracy_tradeoff": bench_accuracy_tradeoff.main,  # k-vs-quality
+    # serving suite (smoke-scale here; the full runs write the checked-in
+    # BENCH_*.json files — see each bench's module docstring)
+    "serving": lambda: bench_serving.main(
+        ["--smoke", "--out", "BENCH_serving_smoke.json"]),
+    "paged_attention": lambda: bench_paged_attention.main(
+        ["--smoke", "--out", "BENCH_paged_attention_smoke.json"]),
 }
 
 

@@ -68,3 +68,18 @@ def shard_act(x):
     mesh, seq_shard = pol
     spec = sh.batch_spec(x.shape, mesh, x.shape[0], seq_shard=seq_shard)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_heads(x):
+    """Sharding pin for a (B, Hq, D) per-slot decode activation — the q and
+    output of the streamed paged attention.  Pins slots over DP and heads
+    over "model" (``sharding.decode_head_spec`` — the pool's own head
+    placement, so the streamed contraction needs no resharding against the
+    pages it reads).  Identity outside a policy or for other ranks.
+    """
+    pol = current_policy()
+    if pol is None or getattr(x, "ndim", None) != 3:
+        return x
+    mesh, _ = pol
+    spec = sh.decode_head_spec(x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -389,6 +389,33 @@ def page_pool_spec(shape: Sequence[int], mesh) -> P:
     return P(*entries)
 
 
+def decode_head_spec(shape: Sequence[int], mesh) -> P:
+    """Spec for per-slot decode-attention activations ``(B, Hq, D)`` — the
+    q / output of the streamed paged-attention op (kernels/paged_attention).
+
+    Slots take the DP axes (the dense batch dim's role), heads take "model"
+    with a head-dim fallback — the SAME head placement ``page_pool_spec``
+    gives the pool, so the streamed contraction shards head-aligned with
+    the KV pages it reads and GSPMD inserts no resharding between them.
+    Replicate-on-indivisible throughout (GQA archs with few heads).
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != 3:
+        return P()
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    entries: List[Any] = [None] * 3
+    if dpa and shape[0] % _prod(sizes[a] for a in dpa) == 0:
+        entries[0] = tuple(dpa)
+    m = sizes.get(MODEL_AXIS)
+    if m:
+        if shape[1] % m == 0:
+            entries[1] = MODEL_AXIS
+        elif shape[2] % m == 0:
+            entries[2] = MODEL_AXIS
+    return P(*entries)
+
+
 def dp_round_up(n: int, mesh) -> int:
     """Round a page count up to a multiple of the mesh's DP-axis product.
 

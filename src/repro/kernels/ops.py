@@ -20,6 +20,7 @@ from ..core import circulant as _cc
 from . import bc_fused as _bcf
 from . import flash_attention as _fa
 from . import paged as _paged
+from . import paged_attention as _pa
 from . import ref as _ref
 from . import spectral_matmul as _sm
 
@@ -65,6 +66,32 @@ def paged_gather(pool, table, mode: str | None = None):
         B, maxp = table.shape
         return pool[table].reshape(B, maxp * page, H, D)
     return _paged.paged_gather_kernel(pool, table,
+                                      interpret=(mode == "interpret"))
+
+
+def paged_attention(q, pool_k, pool_v, table, positions, *, scale=None,
+                    softcap=0.0, mode: str | None = None):
+    """Fused paged flash-decode: stream pool pages through online-softmax.
+
+    q: (B, Hq, D) one decode query per slot; pool: (P, page, Hkv, D);
+    table: (B, maxp) int32 page ids; positions: (B,) int32 per-slot
+    absolute position of the decode token (-1 = idle, fully masked; the
+    output row is exactly zero) -> (B, Hq, D).
+
+    The gathered ``(B, maxp * page, Hkv, D)`` KV view of the old
+    ``paged_gather`` + dense-attention path is never formed: 'off' lowers a
+    live-length-bounded ``lax.while_loop`` over page-sized chunks (same
+    masking semantics, O(page) working set under pure XLA; serving-only —
+    not reverse-differentiable); kernel modes run the scalar-prefetch
+    Pallas flash-decode kernel (kernels/paged_attention.py).
+    """
+    mode = mode or kernel_mode()
+    if mode == "off":
+        return _pa.paged_attention_stream(q, pool_k, pool_v, table,
+                                          positions, scale=scale,
+                                          softcap=softcap)
+    return _pa.paged_attention_kernel(q, pool_k, pool_v, table, positions,
+                                      scale=scale, softcap=softcap,
                                       interpret=(mode == "interpret"))
 
 

@@ -15,6 +15,12 @@ its instruction BRAM and the data buffers.
 Call through ``kernels.ops.paged_gather`` — the REPRO_KERNELS dispatch
 ('interpret'/'tpu'/'off') lives there; 'off' lowers the same gather as
 plain XLA ``pool[table]`` indexing (see ops).
+
+LEGACY / ORACLE PATH: the decode hot loop now streams pages through the
+fused paged flash-decode (``kernels/paged_attention.py``) and never forms
+this gathered view; the gather survives as the parity oracle
+(``ContinuousEngine(paged_attn="gather")``, ``tests/test_paged_attention``)
+and for tooling that genuinely needs a contiguous KV copy.
 """
 from __future__ import annotations
 

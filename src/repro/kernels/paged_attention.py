@@ -1,0 +1,205 @@
+"""Fused paged flash-decode attention: stream pool pages through the
+online-softmax recurrence instead of materializing the gathered KV view.
+
+The PR 3 paged decode path paid O(max_seq) HBM traffic *twice* per emitted
+token: ``paged_gather`` wrote a dense ``(B, maxp * page, Hkv, D)`` copy of
+every live slot's whole KV history, then dense attention read it back.  The
+paper's hardware chapter wins by never letting the hot loop touch more
+memory than it must ("effective reconfiguration, batch processing, deep
+pipelining, resource re-using"); this kernel applies the same discipline to
+paged decode: each slot's pages stream one at a time through the classic
+flash m/l/acc carry, so the gathered view is never formed — per-token
+attention traffic drops to one read of the live positions with an O(page)
+working set.
+
+Masking reproduces the gather path exactly: a kv position ``i`` of slot
+``b`` is valid iff ``i <= positions[b]`` — that single predicate covers
+trash-page-0 reads (unowned table entries only appear beyond the length),
+the partially-filled last page, and idle slots (``positions == -1`` masks
+everything, so the output is exactly zero, as the gather path produced).
+
+Two lowerings, dispatched by ``kernels.ops.paged_attention``:
+
+* ``paged_attention_stream`` — pure XLA: a live-length-bounded
+  ``lax.while_loop`` over page-sized KV chunks (one tiny per-chunk gather
+  each step; serving-only — a while loop is not reverse-differentiable).
+  Same memory win under XLA alone; this is what ``REPRO_KERNELS=off`` (the
+  default, and the 512-chip dry-run) lowers.
+* ``paged_attention_kernel`` — Pallas: the block table and per-slot
+  positions ride scalar prefetch (``PrefetchScalarGridSpec``), so each
+  grid step DMAs exactly one pool page straight into VMEM next to the
+  running softmax state — the paper's hierarchical-control split with the
+  data plane never leaving on-chip memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+# Pages streamed per 'off'-scan step (the streamed working set is
+# B * BLOCK_PAGES * page positions; serve/kvcache.attention_memory_est
+# accounts the same factor in its peak estimate).
+BLOCK_PAGES = 4
+
+
+# ---------------------------------------------------------------------------
+# Pure-XLA streamed lowering ('off' dispatch)
+# ---------------------------------------------------------------------------
+def paged_attention_stream(q, pool_k, pool_v, table, positions, *,
+                           scale=None, softcap: float = 0.0,
+                           block_pages: int = BLOCK_PAGES) -> jax.Array:
+    """q: (B, Hq, D); pool: (P, page, Hkv, D); table: (B, maxp) int32 page
+    ids; positions: (B,) int32 per-slot absolute position of the decode
+    token (-1 = idle slot, fully masked).  Returns (B, Hq, D) in q.dtype.
+
+    The streaming loop is a ``lax.while_loop`` bounded by the LIVE page
+    count (``max(positions) + 1`` over the batch), not the table width: a
+    fully-masked page updates nothing (p == 0 everywhere, m/l/acc carry
+    through bit-exact), so skipping the reservation tail beyond the longest
+    live slot changes no result — per-token traffic is O(seq_len), not
+    O(max_seq).  ``block_pages`` pages stream per step: enough MXU/AVX work
+    per iteration to amortize loop overhead, still an O(page) working set.
+    """
+    _, page, Hkv, D = pool_k.shape
+    B, maxp = table.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qh = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+
+    bp = min(block_pages, maxp)
+    n_blocks = -(-maxp // bp)                    # static bound
+    if maxp % bp:                                # pad tables to block width
+        table = jnp.pad(table, ((0, 0), (0, n_blocks * bp - maxp)))
+    # live extent: blocks holding any position <= max(positions)
+    n_live = jnp.maximum(jnp.max(positions), -1) + 1
+    live_blocks = jnp.minimum((n_live + bp * page - 1) // (bp * page),
+                              n_blocks)
+
+    m0 = jnp.full((B, Hkv, G), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+
+    def body(st):
+        j, m_p, l_p, acc = st
+        pids = jax.lax.dynamic_slice_in_dim(table, j * bp, bp, 1)  # (B, bp)
+        kc = pool_k[pids].astype(jnp.float32)    # (B, bp, page, Hkv, D)
+        vc = pool_v[pids].astype(jnp.float32)
+        kc = kc.reshape(B, bp * page, Hkv, D)
+        vc = vc.reshape(B, bp * page, Hkv, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qh, kc)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = j * bp * page + jnp.arange(bp * page)
+        msk = (cols[None, :] <= positions[:, None])[:, None, None, :]
+        s = jnp.where(msk, s, _NEG)
+        m_n = jnp.maximum(m_p, s.max(-1))
+        p = jnp.exp(s - m_n[..., None])
+        p = jnp.where(msk, p, 0.0)               # fully-masked-page guard
+        alpha = jnp.exp(m_p - m_n)
+        l_n = l_p * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgk,bkhd->bhgd", p, vc)
+        return (j + 1, m_n, l_n, acc)
+
+    _, _, l_f, acc = jax.lax.while_loop(
+        lambda st: st[0] < live_blocks, body,
+        (jnp.int32(0), m0, l0, a0))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel ('interpret' / 'tpu' dispatch)
+# ---------------------------------------------------------------------------
+def _pa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+               m_scr, l_scr, acc_scr, *, scale, softcap, page, maxp):
+    b = pl.program_id(0)
+    jp = pl.program_id(2)                        # sequential page dim
+
+    @pl.when(jp == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Pages past the slot's live extent are fully masked and contribute
+    # nothing to the carry — skip their softmax update entirely (the grid
+    # itself is static at maxp: dead table entries all index the single
+    # trash page, so their DMA re-reads one hot page, not the pool).
+    @pl.when(jp * page <= pos_ref[b])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)                 # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, page)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        cols = jp * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols <= pos_ref[b]                # pos -1 masks everything
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[:, 0] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(jp == maxp - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, pool_k, pool_v, table, positions, *,
+                           scale=None, softcap: float = 0.0,
+                           interpret: bool = False) -> jax.Array:
+    """Same contract as ``paged_attention_stream``; grid (B, Hkv, maxp) with
+    the page dim sequential, block table + positions scalar-prefetched so
+    the page id is known before each step's pool DMA issues."""
+    _, page, Hkv, D = pool_k.shape
+    B, maxp = table.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qh = q.reshape(B, Hkv, G, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # (table, positions)
+        grid=(B, Hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, jp, tref, pref: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, jp, tref, pref: (tref[b, jp], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, jp, tref, pref: (tref[b, jp], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, jp, tref, pref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max
+            pltpu.VMEM((G, 1), jnp.float32),     # running sum
+            pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+        ],
+    )
+    kern = functools.partial(_pa_kernel, scale=scale, softcap=softcap,
+                             page=page, maxp=maxp)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(table, positions, qh, pool_k, pool_v)
+    return out.reshape(B, Hq, D)

@@ -42,6 +42,10 @@ def main():
                     help="continuous: admission token budget")
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="continuous: decode steps per device dispatch")
+    ap.add_argument("--paged-attn", default="stream",
+                    choices=["stream", "gather"],
+                    help="continuous: fused paged flash-decode (default) or "
+                         "the legacy gather-then-attend oracle path")
     ap.add_argument("--decode-mode", default="scan",
                     choices=["scan", "per_token"],
                     help="batch engine: device-resident loop (default) or "
@@ -69,7 +73,7 @@ def main():
             max_tokens_in_flight=args.max_tokens_in_flight,
             decode_chunk=args.decode_chunk, sample=args.sample,
             seed=args.seed, eos_id=args.eos_id,
-            precompute=not args.no_precompute)
+            precompute=not args.no_precompute, paged_attn=args.paged_attn)
     else:
         engine = Engine(cfg, params, max_batch=args.max_batch,
                         max_seq=max_seq, sample=args.sample,
@@ -101,6 +105,10 @@ def main():
               f"{st['decode_s']:.2f}s "
               f"dispatches={st['decode_dispatches']} "
               f"buckets={st['prefill_buckets']}")
+        print(f"[launch.serve] memory: attn={st['attention_impl']} "
+              f"attn_bytes/token={st['attention_bytes_per_token'] / 1e6:.2f}MB "
+              f"peak_attn={st['peak_attention_bytes'] / 1e6:.2f}MB "
+              f"decode_peak_est={st['decode_peak_bytes_est'] / 1e6:.1f}MB")
     else:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.circulant import LinearSpec, apply_linear, init_linear
+from ..dist.ctx import shard_heads
 from ..kernels import ops as kops
 from . import norms
 
@@ -178,7 +179,8 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
                     positions=None, cache=None, cache_pos=None,
                     cross_kv=None, mode="train", impl="chunked",
                     q_chunk=1024, kv_chunk=1024,
-                    block_table=None) -> Tuple[jax.Array, Optional[Dict]]:
+                    block_table=None,
+                    paged_impl="stream") -> Tuple[jax.Array, Optional[Dict]]:
     """Full attention block.  Returns (out, updated_cache).
 
     cache: {"k": (B, Smax, Hkv, D), "v": ..., "pos": (Smax,) int32} or None.
@@ -192,6 +194,12 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
     page ``block_table[b, i // page]``, offset ``i % page``.  A slot with
     ``cache_pos == -1`` is idle: its write routes to the reserved trash
     page 0 and its attention is fully masked (output discarded upstream).
+
+    ``paged_impl`` picks the paged attention lowering: "stream" (default)
+    runs the fused paged flash-decode (``kernels.ops.paged_attention`` —
+    pages stream through online-softmax, no gathered KV view); "gather"
+    keeps the legacy ``paged_gather`` + dense-attention path (the parity
+    oracle, O(B * maxp * page) traffic and peak memory per token).
     """
     a = cfg.attention
     comp = cfg.compression
@@ -250,6 +258,7 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
 
     new_cache = None
     kv_positions = None
+    streamed = None
     if paged:
         assert S == 1, "paged KV path is decode-only (S == 1)"
         assert not window, "paged KV path serves linear caches only"
@@ -263,10 +272,20 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
         pool_k = pool_k.at[pid, off].set(k[:, 0].astype(pool_k.dtype))
         pool_v = pool_v.at[pid, off].set(v[:, 0].astype(pool_v.dtype))
         new_cache = {"k": pool_k, "v": pool_v}
-        k = kops.paged_gather(pool_k, block_table)
-        v = kops.paged_gather(pool_v, block_table)
-        idx = jnp.arange(k.shape[1])[None, :]
-        kv_positions = jnp.where(idx <= cache_pos[:, None], idx, -1)
+        if paged_impl == "stream":
+            # fused paged flash-decode: pages stream through the online
+            # softmax; the gathered (B, maxp*page, Hkv, D) view is never
+            # formed.  Idle slots (cache_pos == -1) come back exactly zero,
+            # the same rows the masked gather path produced.
+            qd = shard_heads(q[:, 0])
+            streamed = shard_heads(kops.paged_attention(
+                qd, pool_k, pool_v, block_table, cache_pos,
+                softcap=a.logit_softcap))[:, None]
+        else:
+            k = kops.paged_gather(pool_k, block_table)
+            v = kops.paged_gather(pool_v, block_table)
+            idx = jnp.arange(k.shape[1])[None, :]
+            kv_positions = jnp.where(idx <= cache_pos[:, None], idx, -1)
     elif cache is not None and cross_kv is None:
         Smax = cache["k"].shape[1]
         if window and Smax <= window:                    # ring buffer (SWA)
@@ -297,10 +316,13 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
             if S == 1:                                   # decode reads cache
                 k, v, kv_positions = kc, vc, pos_c
 
-    o = attend(q, k, v, impl=impl, causal=causal and cross_kv is None,
-               window=window, softcap=a.logit_softcap,
-               q_pos0=q_pos0, kv_positions=kv_positions,
-               q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if streamed is not None:
+        o = streamed
+    else:
+        o = attend(q, k, v, impl=impl, causal=causal and cross_kv is None,
+                   window=window, softcap=a.logit_softcap,
+                   q_pos0=q_pos0, kv_positions=kv_positions,
+                   q_chunk=q_chunk, kv_chunk=kv_chunk)
     out = apply_linear(params["o"], o.reshape(B, S, H * D), ospec,
                        x.shape[-1], mode)
     return out, new_cache

@@ -68,7 +68,8 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params, tokens, cache, cache_pos,
-                    block_table=None) -> Tuple[jax.Array, Any]:
+                    block_table=None,
+                    paged_impl: str = "stream") -> Tuple[jax.Array, Any]:
         cfg = self.cfg
         if cfg.is_encoder_decoder:
             assert block_table is None, "paged decode is decoder-LM only"
@@ -79,7 +80,8 @@ class Model:
             return logits, {"self": new_self, "cross": cache["cross"]}
         logits, _, new_cache = transformer.forward(
             params, tokens, cfg, mode="serve", cache=cache,
-            cache_pos=cache_pos, block_table=block_table)
+            cache_pos=cache_pos, block_table=block_table,
+            paged_impl=paged_impl)
         return logits, new_cache
 
     def init_cache(self, batch: int, max_seq: int, dtype=None):

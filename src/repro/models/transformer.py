@@ -105,7 +105,7 @@ def init_block(key, kind: str, cfg: ArchConfig) -> Dict:
 
 def apply_block(params, x, kind: str, cfg: ArchConfig, *, mode: str,
                 cache=None, cache_pos=None, q_chunk: int, kv_chunk: int,
-                block_table=None):
+                block_table=None, paged_impl: str = "stream"):
     """Returns (x, new_cache, aux)."""
     comp = cfg.compression
     aux = jnp.zeros((), jnp.float32)
@@ -116,7 +116,7 @@ def apply_block(params, x, kind: str, cfg: ArchConfig, *, mode: str,
             params["attn"], h, cfg=cfg, causal=True,
             window=_window_for(kind, cfg), cache=cache, cache_pos=cache_pos,
             mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk,
-            block_table=block_table)
+            block_table=block_table, paged_impl=paged_impl)
         if "ln1_post" in params:
             a = norm_lib.apply_norm(cfg.norm, params["ln1_post"], a)
         x = x + a
@@ -216,12 +216,15 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 def forward(params, tokens, cfg: ArchConfig, *, mode: str = "train",
             cache: Optional[List] = None, cache_pos=None,
             frontend_embeds=None, q_chunk: Optional[int] = None,
-            kv_chunk: Optional[int] = None, block_table=None):
+            kv_chunk: Optional[int] = None, block_table=None,
+            paged_impl: str = "stream"):
     """tokens: (B, S) int32.  Returns (logits, aux, new_cache).
 
     With ``block_table`` set, ``cache`` is a paged pool tree (attention
     leaves {"k","v"} shaped (n, P, page, Hkv, D)) and ``cache_pos`` is the
-    per-slot (B,) position vector — see serve/kvcache.py.
+    per-slot (B,) position vector — see serve/kvcache.py.  ``paged_impl``
+    selects the paged attention lowering ("stream" fused flash-decode /
+    "gather" legacy materialized view — see layers/attention.py).
     """
     q_chunk = q_chunk or cfg.attn_q_chunk
     kv_chunk = kv_chunk or cfg.attn_kv_chunk
@@ -259,7 +262,7 @@ def forward(params, tokens, cfg: ArchConfig, *, mode: str = "train",
                 x_, c_out, aux_b = apply_block(
                     bp, x_, kind, cfg, mode=mode, cache=c_in,
                     cache_pos=cache_pos, q_chunk=q_chunk, kv_chunk=kv_chunk,
-                    block_table=block_table)
+                    block_table=block_table, paged_impl=paged_impl)
                 new_gc.append(c_out)
                 aux_ = aux_ + aux_b
             x_ = shard_act(x_)

@@ -147,7 +147,8 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
 def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                            sample: bool = False, temperature: float = 1.0,
                            eos_id: Optional[int] = None, seed: int = 0,
-                           logits_sharding=None) -> Callable:
+                           logits_sharding=None,
+                           paged_impl: str = "stream") -> Callable:
     """Device-resident decode over paged slots: one dispatch per ``chunk``.
 
     The carry holds per-slot (token, position, remaining budget, done) —
@@ -158,6 +159,12 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
     buffer slots hold ``eos_id``/0.  The loop exits early once every slot
     is frozen; the scheduler retires/refills slots between dispatches.
 
+    ``paged_impl`` selects the attention lowering inside the step:
+    "stream" (default) runs the fused paged flash-decode — pool pages
+    stream through online-softmax, so the loop's peak memory no longer
+    carries a ``(B, maxp * page, Hkv, D)`` gathered KV view per layer;
+    "gather" keeps the PR 3 materialized-view path as the parity oracle.
+
     Returns ``decode_loop(params, cur, pool, table, pos, rem)`` ->
     ``(buf (B, chunk) int32, cur, pool, pos, rem, done)``.
     """
@@ -167,7 +174,8 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
 
     def step(params, cur, pool, pos_masked, table):
         logits, pool = model.decode_step(params, cur[:, None], pool,
-                                         pos_masked, block_table=table)
+                                         pos_masked, block_table=table,
+                                         paged_impl=paged_impl)
         if logits_sharding is not None:
             logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
         if sample:

@@ -251,7 +251,10 @@ class ContinuousEngine:
                  decode_chunk: int = 8, sample: bool = False,
                  temperature: float = 1.0, seed: int = 0,
                  eos_id: Optional[int] = None, mesh=None,
-                 precompute: bool = True):
+                 precompute: bool = True, paged_attn: str = "stream"):
+        if paged_attn not in ("stream", "gather"):
+            raise ValueError(f"paged_attn {paged_attn!r}: "
+                             f"expected 'stream' or 'gather'")
         reasons = kvc.servable_reasons(cfg)
         if reasons:
             raise ValueError(f"{cfg.name} is not continuous-servable: "
@@ -265,6 +268,7 @@ class ContinuousEngine:
         self.decode_chunk = decode_chunk
         self.sample = sample
         self.eos_id = eos_id
+        self.paged_attn = paged_attn
         self.max_pages_per_slot = kvc.pages_for(max_seq, page_size)
         if num_pages is None:
             num_pages = max_slots * self.max_pages_per_slot + 1
@@ -272,7 +276,18 @@ class ContinuousEngine:
             raise ValueError(f"num_pages {num_pages} cannot hold one "
                              f"max_seq request (+trash page)")
         if max_tokens_in_flight is None:
-            max_tokens_in_flight = max_slots * (max_seq + 1)
+            # Streamed paged attention (the default) never materializes the
+            # (B, maxp*page, Hkv, D) gathered KV view, so peak decode memory
+            # no longer scales with slots x max_seq — the default admission
+            # budget fills every slot.  The gather oracle's default is NEWLY
+            # halved here (PR 3 defaulted to the ceiling): every token it
+            # has in flight pays an O(max_seq) gather per decode step, so
+            # its memory-honest budget is conservative.  Pass
+            # max_tokens_in_flight explicitly to A/B the attention paths
+            # under identical admission.
+            ceiling = max_slots * (max_seq + 1)
+            max_tokens_in_flight = (ceiling if paged_attn == "stream"
+                                    else max(max_seq + 1, ceiling // 2))
         if max_tokens_in_flight < max_seq + 1:
             raise ValueError(f"max_tokens_in_flight {max_tokens_in_flight} "
                              f"cannot admit one max_seq request")
@@ -298,7 +313,8 @@ class ContinuousEngine:
         # first time an unseen size comes up (disastrous for tail latency)
         self._loop = jax.jit(dec.make_paged_decode_loop(
             cfg, decode_chunk, sample=sample, temperature=temperature,
-            eos_id=eos_id, seed=seed), donate_argnums=(2,))
+            eos_id=eos_id, seed=seed, paged_impl=paged_attn),
+            donate_argnums=(2,))
         self._prefills: Dict[int, object] = {}
         self._cur = np.zeros(max_slots, np.int32)
         self._pos = np.zeros(max_slots, np.int32)
@@ -437,7 +453,9 @@ class ContinuousEngine:
     # -- telemetry --------------------------------------------------------
     def stats(self) -> Dict:
         """Engine + scheduler telemetry: queue depth, in-flight tokens,
-        page-pool utilization, prefill/decode split, pool footprint."""
+        page-pool utilization, prefill/decode split, pool footprint, and
+        the decode-attention memory estimates (worst case: every slot at
+        full length) the serving benchmarks record."""
         st = dict(self._stats)
         st.update(self.scheduler.stats())
         st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
@@ -446,4 +464,10 @@ class ContinuousEngine:
             st["prefill_s"] + st["decode_s"], 1e-9)
         st["pool_bytes"] = kvc.pool_bytes(self.pool)
         st["prefill_buckets"] = sorted(self._prefills)
+        st["attention_impl"] = self.paged_attn
+        st.update(kvc.attention_memory_est(
+            self.pool, self.max_slots, self.max_pages_per_slot,
+            self.page_size, self.paged_attn))
+        st["decode_peak_bytes_est"] = (st["pool_bytes"]
+                                       + st["peak_attention_bytes"])
         return st

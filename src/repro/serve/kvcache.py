@@ -224,3 +224,49 @@ def pool_bytes(pool) -> int:
     """Total bytes of the device pool (telemetry)."""
     return sum(int(leaf.size) * np.dtype(leaf.dtype).itemsize
                for leaf in jax.tree.leaves(pool))
+
+
+def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,
+                         page_size: int, impl: str = "stream") -> Dict:
+    """Analytic decode-attention memory estimates over a pool tree.
+
+    Worst case (every slot serving a full ``max_pages_per_slot * page_size``
+    history), for the telemetry the serving benchmarks record:
+
+    * ``attention_bytes_per_token`` — HBM bytes attention touches to emit
+      ONE token for one slot, summed over every attention layer.  The
+      streamed flash-decode reads each live position's K+V once; the legacy
+      gather path additionally writes and re-reads the dense gathered view
+      (3x the traffic).
+    * ``peak_attention_bytes`` — the largest transient attention buffer of
+      one decode step: gather materializes ``(B, maxp * page, Hkv, D)`` k+v
+      views of the widest layer, the streamed path holds one
+      ``BLOCK_PAGES``-page chunk per slot (the 'off' scan streams that many
+      pages per step — kernels/paged_attention.py).
+    """
+    from ..kernels.paged_attention import BLOCK_PAGES
+    per_pos, widest = 0, 0
+
+    def walk(node):
+        nonlocal per_pos, widest
+        if _is_kv_leaf(node):
+            n = node["k"].shape[0]
+            hkv, d = node["k"].shape[-2:]
+            item = np.dtype(node["k"].dtype).itemsize
+            per_pos += 2 * n * hkv * d * item          # k + v, all groups
+            widest = max(widest, 2 * hkv * d * item)
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pool)
+    max_len = max_pages_per_slot * page_size
+    if impl == "gather":
+        return {"attention_bytes_per_token": 3 * per_pos * max_len,
+                "peak_attention_bytes": max_slots * max_len * widest}
+    chunk = min(BLOCK_PAGES, max_pages_per_slot) * page_size
+    return {"attention_bytes_per_token": per_pos * max_len,
+            "peak_attention_bytes": max_slots * chunk * widest}
