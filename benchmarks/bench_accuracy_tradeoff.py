@@ -6,18 +6,43 @@ Trains the same tiny LM with dense weights and with k ∈ {4, 8, 16, 32}
 block-circulant weights on the deterministic bigram task and reports final
 loss per compression ratio.  (MNIST/SVHN/CIFAR are not available offline —
 DESIGN.md records this substitution.)
+
+The FIXED-POINT axis (the paper's hardware half: 12-16-bit weights in the
+FFT domain cost near-zero accuracy) rides on top: each trained circulant
+model is re-evaluated through the serve path with its precomputed spectral
+planes quantized to int8 and packed-int4 (repro.quant), reporting the
+eval-loss delta per (k, weight precision) cell.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import (ArchConfig, AttentionConfig,
                                 CompressionConfig)
 from repro.data.pipeline import SyntheticLM
+from repro.models import transformer
 from repro.optim import adamw
+from repro.quant import QuantPolicy
+from repro.serve.params import precompute_serving_params
 from repro.train import train_step as ts
 
 from .common import emit
+
+
+def eval_serve_loss(cfg, params, data, policy=None, batches: int = 5):
+    """Eval cross-entropy through the SERVE lowering (spectral caches
+    consulted), with optionally quantized planes — the fixed-point cell."""
+    p = precompute_serving_params(params, cfg, policy)
+
+    @jax.jit
+    def loss_of(batch):
+        logits, _, _ = transformer.forward(p, batch["tokens"], cfg,
+                                           mode="serve")
+        return ts.cross_entropy(logits.astype(jnp.float32),
+                                batch["labels"])
+    return float(sum(loss_of(data(10_000 + i)) for i in range(batches))
+                 / batches)
 
 
 def run_one(k: int, steps: int = 60, seed: int = 0):
@@ -38,23 +63,39 @@ def run_one(k: int, steps: int = 60, seed: int = 0):
         if i >= steps - 10:
             last.append(float(m["loss"]))
     n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
-    return sum(last) / len(last), n_params
+    # fixed-point axis: serve-path eval loss with f32 / int8 / int4 planes
+    # (dense k=1 has no spectral planes to quantize: None)
+    quant = {}
+    if k > 1:
+        f32 = eval_serve_loss(cfg, state["params"], data)
+        i8 = eval_serve_loss(cfg, state["params"], data,
+                             QuantPolicy(quant_weights=True))
+        i4 = eval_serve_loss(cfg, state["params"], data,
+                             QuantPolicy(quant_weights=True, weight_bits=4))
+        quant = {"eval_f32": f32, "int8_delta": i8 - f32,
+                 "int4_delta": i4 - f32}
+    return sum(last) / len(last), n_params, quant
 
 
 def main():
-    print("# bench_accuracy_tradeoff (block size vs quality, synthetic LM)")
+    print("# bench_accuracy_tradeoff (block size + weight precision vs "
+          "quality, synthetic LM)")
     rows = []
-    base_loss, base_params = run_one(1)
+    base_loss, base_params, _ = run_one(1)
     rows.append({"k": "dense", "final_loss": round(base_loss, 4),
                  "params": base_params, "compression": 1.0,
-                 "loss_vs_dense": 0.0})
+                 "loss_vs_dense": 0.0, "int8_loss_delta": "",
+                 "int4_loss_delta": ""})
     for k in (4, 8, 16, 32):
-        loss, params = run_one(k)
+        loss, params, quant = run_one(k)
         rows.append({"k": k, "final_loss": round(loss, 4),
                      "params": params,
                      "compression": round(base_params / params, 2),
-                     "loss_vs_dense": round(loss - base_loss, 4)})
-    emit(rows, ["k", "final_loss", "params", "compression", "loss_vs_dense"])
+                     "loss_vs_dense": round(loss - base_loss, 4),
+                     "int8_loss_delta": round(quant["int8_delta"], 4),
+                     "int4_loss_delta": round(quant["int4_delta"], 4)})
+    emit(rows, ["k", "final_loss", "params", "compression", "loss_vs_dense",
+                "int8_loss_delta", "int4_loss_delta"])
 
 
 if __name__ == "__main__":

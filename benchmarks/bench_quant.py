@@ -1,0 +1,145 @@
+"""Fixed-point serving quantization: pool bytes/slot, equal-KV-memory
+slot capacity + throughput, and fixed-point accuracy parity.
+
+Three questions, one JSON (the quant half of the paper's co-optimization
+story — the algorithm half's compression benches are bench_compression /
+bench_accuracy_tradeoff):
+
+* **bytes/slot** — what one decode slot's worst-case KV reservation costs
+  per pool dtype (f32 / bf16 / int8+scales), analytic via
+  ``kvcache.page_bytes`` (no allocation).
+* **equal KV memory** — pools of every dtype sized to the SAME byte
+  budget (the f32 pool's footprint): int8 carries ~4x the pages, so
+  ~4x the slots (~2x vs bf16); a saturated drain of an oversubscribed
+  workload measures what the extra slots buy in tokens/s on this host.
+* **parity** — teacher-forced greedy agreement + max logit drift of the
+  int8-KV (and int8-weight) stack vs the f32 oracle
+  (``quant.calibrate``), per servable arch (tinyllama only in --smoke).
+
+  PYTHONPATH=src python benchmarks/bench_quant.py --out BENCH_quant.json
+  PYTHONPATH=src python benchmarks/bench_quant.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+from repro.quant import QuantPolicy, calibrate
+from repro.serve.kvcache import page_bytes, pages_for
+
+try:                                   # package run (python -m benchmarks.run)
+    from .common import bench_kv_equal_memory, make_serving_workload
+except ImportError:                    # standalone (python benchmarks/...)
+    from common import bench_kv_equal_memory, make_serving_workload
+
+DTYPES = ("f32", "bf16", "int8")
+
+
+def bench_equal_memory(cfg, params, reqs, **kw):
+    """Size every dtype's pool to the f32 pool's byte budget; drain the
+    same oversubscribed backlog through each and keep the best wall
+    (shared core: ``common.bench_kv_equal_memory`` — the same rows feed
+    bench_serving's ``kv_equal_memory`` section)."""
+    out = bench_kv_equal_memory(cfg, params, reqs, **kw)
+    for kv_dtype, row in out.items():
+        print(f"[bench_quant] equal-mem {kv_dtype:>5}: {row['slots']:3d} "
+              f"slots, {row['kv_pool_bytes'] / 1e6:6.2f}MB pool, "
+              f"{row['tokens_per_s']:7.1f} tok/s", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="f32 slot count the shared byte budget is sized to")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--parity-tokens", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.iters = 1
+        prompt_lens, new_tokens = (8, 16), (4, 8, 16)
+    else:
+        prompt_lens, new_tokens = (8, 16, 24, 32, 40), (4, 8, 16, 24, 64)
+    max_seq = max(prompt_lens) + max(new_tokens)
+
+    cfg = get_smoke_config(args.arch)
+    if not args.smoke:
+        cfg = cfg.replace(num_layers=4, d_model=256, d_ff=512)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    reqs, _ = make_serving_workload(args.requests, prompt_lens=prompt_lens,
+                                    new_tokens=new_tokens,
+                                    vocab=cfg.vocab_size)
+
+    pages_per_slab = pages_for(max_seq, args.page_size)
+    pool_rows = {d: {"page_bytes": page_bytes(cfg, args.page_size,
+                                              QuantPolicy(kv_dtype=d)),
+                     "bytes_per_slot": pages_per_slab * page_bytes(
+                         cfg, args.page_size, QuantPolicy(kv_dtype=d))}
+                 for d in DTYPES}
+    for d, row in pool_rows.items():
+        print(f"[bench_quant] bytes/slot {d:>5}: {row['bytes_per_slot']}",
+              flush=True)
+
+    equal = bench_equal_memory(
+        cfg, params, reqs, budget_pages_f32=args.max_batch * pages_per_slab,
+        page_size=args.page_size, max_seq=max_seq,
+        decode_chunk=args.decode_chunk, iters=args.iters)
+
+    archs = [args.arch] if args.smoke else None
+    parity = []
+    for policy in (QuantPolicy(kv_dtype="int8"),
+                   QuantPolicy(kv_dtype="int8", quant_weights=True)):
+        parity += calibrate.servable_parity_sweep(
+            policy, archs=archs, new_tokens=args.parity_tokens)
+    for r in parity:
+        print(f"[bench_quant] parity {r['arch']:>26} "
+              f"kv={r['policy']['kv_dtype']} "
+              f"w={'int8' if r['policy']['quant_weights'] else 'f32'}: "
+              f"agree {r['greedy_agreement']:.4f} "
+              f"drift {r['max_logit_drift']:.4f}", flush=True)
+
+    kv_only = [r for r in parity if not r["policy"]["quant_weights"]]
+    result = {
+        "arch": args.arch,
+        "requests": args.requests,
+        "page_size": args.page_size,
+        "max_seq": max_seq,
+        "backend": jax.default_backend(),
+        "pool_bytes": pool_rows,
+        "equal_kv_memory": equal,
+        "parity": parity,
+        "slots_ratio_int8_vs_f32": equal["int8"]["slots"]
+        / equal["f32"]["slots"],
+        "slots_ratio_int8_vs_bf16": equal["int8"]["slots"]
+        / equal["bf16"]["slots"],
+        "tokens_ratio_int8_vs_f32": equal["int8"]["tokens_per_s"]
+        / equal["f32"]["tokens_per_s"],
+        "min_kv_greedy_agreement": min(r["greedy_agreement"]
+                                       for r in kv_only),
+    }
+    print(f"[bench_quant] equal-KV-memory slots: int8/f32 = "
+          f"{result['slots_ratio_int8_vs_f32']:.2f}x, int8/bf16 = "
+          f"{result['slots_ratio_int8_vs_bf16']:.2f}x; tokens/s int8/f32 = "
+          f"{result['tokens_ratio_int8_vs_f32']:.2f}x; min kv-parity "
+          f"agreement {result['min_kv_greedy_agreement']:.4f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print("wrote", args.out)
+    return result
+
+
+if __name__ == "__main__":
+    main()

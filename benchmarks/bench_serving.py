@@ -24,6 +24,12 @@ of that the continuous engine retires slots individually, admits queued
 requests into freed slots between device dispatches, and prefills each
 prompt at its own page-bucketed length — so it wins both regimes.
 
+A third section, ``kv_equal_memory``, holds the continuous engine fixed
+and varies the POOL DTYPE (repro.quant): f32 / bf16 / int8 pools all
+sized to the f32 byte budget, slots scaled to fill it — the int8 pool
+(+absmax scales) carries ~4x the f32 slots and ~2x the bf16 slots at
+equal memory (bench_quant.py adds the accuracy-parity side of the trade).
+
   PYTHONPATH=src python benchmarks/bench_serving.py --requests 24 \
       --out BENCH_serving.json
   PYTHONPATH=src python benchmarks/bench_serving.py --smoke
@@ -42,17 +48,10 @@ from repro.models.registry import build_model
 from repro.serve.engine import ContinuousEngine, Engine, Request
 from repro.serve.kvcache import pages_for
 
-
-def make_workload(n: int, *, prompt_lens, new_tokens, mean_interarrival_s,
-                  vocab: int, seed: int = 0):
-    rng = np.random.RandomState(seed)
-    reqs = [Request(prompt=rng.randint(1, vocab, size=int(rng.choice(
-        prompt_lens))).astype(np.int32),
-        max_new_tokens=int(rng.choice(new_tokens)), id=i)
-        for i in range(n)]
-    gaps = rng.exponential(mean_interarrival_s, size=n)
-    arrivals = np.cumsum(gaps) - gaps[0]               # first arrives at t=0
-    return reqs, arrivals.tolist()
+try:                                   # package run (python -m benchmarks.run)
+    from .common import bench_kv_equal_memory, make_serving_workload
+except ImportError:                    # standalone (python benchmarks/...)
+    from common import bench_kv_equal_memory, make_serving_workload
 
 
 def _metrics(latencies, tokens: int, makespan: float) -> dict:
@@ -182,7 +181,7 @@ def main(argv=None):
         # size where a wasted decode step costs real time (still CPU-fast)
         cfg = cfg.replace(num_layers=4, d_model=256, d_ff=512)
     params = build_model(cfg).init(jax.random.PRNGKey(0))
-    reqs, arrivals = make_workload(
+    reqs, arrivals = make_serving_workload(
         args.requests, prompt_lens=prompt_lens, new_tokens=new_tokens,
         mean_interarrival_s=args.mean_interarrival, vocab=cfg.vocab_size)
     # EQUAL KV MEMORY: the pool holds exactly the dense engine's cache
@@ -200,6 +199,13 @@ def main(argv=None):
     rows = {"saturated": bench_saturated(
         cfg, params, reqs, max_batch=args.max_batch, max_seq=max_seq,
         engine_kw=engine_kw, iters=args.iters)}
+    # EQUAL KV MEMORY across pool dtypes (repro.quant): the headline is
+    # the SLOT ratio (deterministic capacity at one byte budget); tokens/s
+    # shows what the extra concurrency buys on this host
+    rows["kv_equal_memory"] = bench_kv_equal_memory(
+        cfg, params, reqs, budget_pages_f32=args.max_batch * pages_per_slab,
+        page_size=args.page_size, max_seq=max_seq,
+        decode_chunk=args.decode_chunk, iters=args.iters)
     rows["poisson"] = {
         "batch": bench_batch_poisson(
             cfg, params, reqs, arrivals, max_batch=args.max_batch,
@@ -215,7 +221,7 @@ def main(argv=None):
             print(f"[bench_serving] {section:>9}/{name:<15} "
                   f"{r['tokens_per_s']:7.1f} tok/s{lat}", flush=True)
 
-    sat, poi = rows["saturated"], rows["poisson"]
+    sat, poi, kvm = rows["saturated"], rows["poisson"], rows["kv_equal_memory"]
     result = {
         "arch": args.arch,
         "requests": args.requests,
@@ -238,6 +244,10 @@ def main(argv=None):
         "poisson_p99_ratio_batch_vs_continuous": (
             poi["batch"]["p99_latency_s"]
             / max(poi["continuous"]["p99_latency_s"], 1e-9)),
+        "kv_slots_ratio_int8_vs_f32": (kvm["int8"]["slots"]
+                                       / kvm["f32"]["slots"]),
+        "kv_slots_ratio_int8_vs_bf16": (kvm["int8"]["slots"]
+                                        / kvm["bf16"]["slots"]),
     }
     print(f"[bench_serving] saturated: continuous/batch = "
           f"{result['speedup_continuous_vs_batch']:.2f}x tokens/s, "
@@ -246,6 +256,11 @@ def main(argv=None):
           f"{result['poisson_speedup_continuous_vs_batch']:.2f}x tokens/s, "
           f"p99 batch/continuous = "
           f"{result['poisson_p99_ratio_batch_vs_continuous']:.1f}x")
+    slot_counts = ", ".join("%s: %d" % (d, kvm[d]["slots"]) for d in kvm)
+    print(f"[bench_serving] equal KV memory: int8 pool carries "
+          f"{result['kv_slots_ratio_int8_vs_f32']:.2f}x the f32 slots / "
+          f"{result['kv_slots_ratio_int8_vs_bf16']:.2f}x the bf16 slots "
+          f"({slot_counts})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

@@ -40,6 +40,78 @@ def emit(rows: List[Dict], header: List[str]):
     print()
 
 
+def make_serving_workload(n: int, *, prompt_lens, new_tokens, vocab: int,
+                          mean_interarrival_s: float = 0.0, seed: int = 0):
+    """Mixed-length serving workload shared by bench_serving / bench_quant:
+    (requests, poisson arrival times) — arrivals degenerate to all-zero
+    (a standing backlog) when ``mean_interarrival_s`` is 0."""
+    import numpy as np
+
+    from repro.serve.engine import Request
+    rng = np.random.RandomState(seed)
+    reqs = [Request(prompt=rng.randint(1, vocab, size=int(rng.choice(
+        prompt_lens))).astype(np.int32),
+        max_new_tokens=int(rng.choice(new_tokens)), id=i)
+        for i in range(n)]
+    if not mean_interarrival_s:
+        return reqs, [0.0] * n
+    gaps = rng.exponential(mean_interarrival_s, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]               # first arrives at t=0
+    return reqs, arrivals.tolist()
+
+
+def bench_kv_equal_memory(cfg, params, reqs, *, budget_pages_f32: int,
+                          page_size: int, max_seq: int, decode_chunk: int,
+                          iters: int) -> Dict[str, Dict]:
+    """Continuous engine at EQUAL KV MEMORY across pool dtypes (the shared
+    core of bench_serving's ``kv_equal_memory`` section and bench_quant).
+
+    Every pool is sized to the f32 pool's byte budget (``budget_pages_f32``
+    f32 pages): bf16 halves the bytes/slot, int8+scales quarters them
+    (repro.quant), slot count scales to fill the budget
+    (``num_pages = usable + 1`` keeps the trash page outside the budget),
+    and the same backlog drains through each engine — warm pass first,
+    best-of-``iters`` wall kept (shared-host convention).
+    """
+    from repro.quant import QuantPolicy
+    from repro.serve.engine import ContinuousEngine
+    from repro.serve.kvcache import page_bytes, pages_for
+
+    pages_per_slab = pages_for(max_seq, page_size)
+    budget = budget_pages_f32 * page_bytes(cfg, page_size)
+    out: Dict[str, Dict] = {}
+    for kv_dtype in ("f32", "bf16", "int8"):
+        policy = QuantPolicy(kv_dtype=kv_dtype)
+        usable = budget // page_bytes(cfg, page_size, policy)
+        slots = max(1, usable // pages_per_slab)
+        eng = ContinuousEngine(
+            cfg, params, max_slots=slots, max_seq=max_seq,
+            page_size=page_size, decode_chunk=decode_chunk,
+            num_pages=usable + 1,
+            max_tokens_in_flight=slots * (max_seq + 1), quant=policy)
+        eng.generate(reqs)                              # compile + warm
+        best, tokens = None, 0
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            res = eng.generate(reqs)
+            dt = time.perf_counter() - t0
+            tokens = sum(r["decode_len"] for r in res)
+            best = dt if best is None else min(best, dt)
+        st = eng.stats()
+        out[kv_dtype] = {
+            "slots": slots,
+            "usable_pages": int(usable),
+            "kv_pool_bytes": st["kv_pool_bytes"],
+            "bytes_per_slot": pages_per_slab * page_bytes(cfg, page_size,
+                                                          policy),
+            "tokens": int(tokens),
+            "makespan_s": best,
+            "tokens_per_s": tokens / max(best, 1e-9),
+            "attention_bytes_per_token": st["attention_bytes_per_token"],
+        }
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The paper's benchmark model inventories (layer dims from the described
 # structures: prior-pooled MNIST MLPs, LeNet-5-like CNN, small CIFAR CNN).

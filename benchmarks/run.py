@@ -10,7 +10,7 @@ import time
 
 from . import (bench_accuracy_tradeoff, bench_complexity, bench_compression,
                bench_decoupling, bench_equiv_ops, bench_paged_attention,
-               bench_serving, bench_throughput)
+               bench_quant, bench_serving, bench_throughput)
 
 ALL = {
     "compression": bench_compression.main,        # paper Fig. 3
@@ -25,6 +25,8 @@ ALL = {
         ["--smoke", "--out", "BENCH_serving_smoke.json"]),
     "paged_attention": lambda: bench_paged_attention.main(
         ["--smoke", "--out", "BENCH_paged_attention_smoke.json"]),
+    "quant": lambda: bench_quant.main(
+        ["--smoke", "--out", "BENCH_quant_smoke.json"]),
 }
 
 

@@ -67,9 +67,22 @@ REPLICATED_LEAVES = frozenset({"pos"})
 # they shard exactly like a `wc` of the same projection.
 SPECTRAL_PLANES = frozenset({"wr", "wi", "ws1", "ws2"})
 
+# Quantization scales of those planes (repro.quant: `<plane>_s`, (p, 1) per
+# block row; experts (E, p, 1)).  Scales shard LIKE THEIR PAYLOAD's sharded
+# dims they actually have: the block-row dim takes "model" exactly when the
+# payload's block-row dim does (column-parallel projections; row-parallel
+# planes model-shard their q dim, which a scale does not have, so row scales
+# replicate).  Scales are tiny and never shard over data-parallel axes.
+SPECTRAL_SCALES = frozenset({"wr_s", "wi_s", "ws1_s", "ws2_s"})
+
+# Paged-pool quantization scales (serve/kvcache.py int8 pools): one f32 per
+# (page, kv-head), leaf names `k_scale`/`v_scale`, shape (..., P, Hkv).
+POOL_SCALES = frozenset({"k_scale", "v_scale"})
+
 # Canonical core ranks per leaf kind: extra leading dims are stack dims.
 _CORE_RANK = {"wc": 3, "w": 2, "table": 2,
-              "wr": 3, "wi": 3, "ws1": 3, "ws2": 3}
+              "wr": 3, "wi": 3, "ws1": 3, "ws2": 3,
+              "wr_s": 2, "wi_s": 2, "ws1_s": 2, "ws2_s": 2}
 
 STRATEGIES = {"2d": "2d", "megatron": "2d", "tokenpar": "tokenpar"}
 
@@ -172,7 +185,7 @@ def _linear_name(path: Tuple[str, ...]) -> str:
     leaf = path[-1]
     if leaf in ("w", "wc", "b") and len(path) >= 2:
         return path[-2]
-    if leaf in SPECTRAL_PLANES and len(path) >= 2:
+    if (leaf in SPECTRAL_PLANES or leaf in SPECTRAL_SCALES) and len(path) >= 2:
         parent = path[-2]
         if parent == "wc_cache" and len(path) >= 3:
             return path[-3]                  # e.g. o/wc_cache/wr -> "o" (row)
@@ -193,6 +206,21 @@ def _param_core_spec(path, core, sizes, strategy) -> P:
         if tp:
             plan.append((MODEL_AXIS, [0]))
         plan.extend((a, [0]) for a in DP_AXES)
+        return _derive(core, sizes, plan, contraction_dims=())
+
+    # per-block-row quantization scales (p, 1) / expert (E, p, 1): the
+    # block-row dim carries "model" exactly when the payload's does
+    # (column TP; expert scales follow the EP-first preference); size-1
+    # dims never place, and DP axes are skipped — a replicated scale is
+    # free next to its k-times-larger payload.  Checked BEFORE the experts
+    # branch: an (E, p, 1) scale must not be specced as a dense
+    # (E, n_in, n_out) expert weight.
+    if leaf in SPECTRAL_SCALES and len(core) in (2, 3):
+        if len(core) == 3:                       # (E, p, 1) expert scales
+            prefs = [0] + ([] if row else [1])
+        else:                                    # (p, 1)
+            prefs = [] if row else [0]
+        plan = [(MODEL_AXIS, prefs)] if tp else []
         return _derive(core, sizes, plan, contraction_dims=())
 
     if "experts" in path:                        # (E, ...) per-expert stacks
@@ -258,8 +286,9 @@ def param_spec(path: Sequence[Any], shape: Sequence[int], mesh,
     n_stack = 1 if (path and STACKED_ROOTS.intersection(path)) else 0
     if leaf in _CORE_RANK:                       # rank-derived stack count
         rank = _CORE_RANK[leaf]
-        if leaf in SPECTRAL_PLANES and "experts" in path:
-            rank += 1                            # (E, p, q, kf) expert planes
+        if (leaf in SPECTRAL_PLANES or leaf in SPECTRAL_SCALES) \
+                and "experts" in path:
+            rank += 1            # (E, p, q, kf) expert planes / (E, p, 1)
         n_stack = max(n_stack, len(shape) - rank)
     n_stack = min(n_stack, len(shape))
     core = shape[n_stack:]
@@ -428,16 +457,49 @@ def dp_round_up(n: int, mesh) -> int:
     return -(-int(n) // dp) * dp
 
 
+def page_scale_spec(shape: Sequence[int], mesh) -> P:
+    """Spec for a paged-pool quantization-scale leaf ``(..., P, Hkv)``
+    (serve/kvcache.py int8 pools: one f32 absmax scale per (page, head)).
+
+    Scales shard LIKE THEIR PAYLOAD: the page-id dim takes the DP axes
+    exactly as ``page_pool_spec`` places the pool's, and heads take
+    "model" when divisible.  A scale has no in-page-offset dim at all —
+    the per-page granularity is what keeps the offset axis unsharded by
+    construction — and no head_dim, so the pool's head_dim fallback
+    becomes replication here (free at this size).
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) < 2:
+        return P()
+    sizes = axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    entries: List[Any] = [None] * len(shape)
+    p_idx = len(shape) - 2
+    if dpa and shape[p_idx] % _prod(sizes[a] for a in dpa) == 0:
+        entries[p_idx] = tuple(dpa)
+    m = sizes.get(MODEL_AXIS)
+    if m and shape[-1] % m == 0:
+        entries[-1] = MODEL_AXIS
+    return P(*entries)
+
+
 def pool_specs(pool, mesh):
-    """``page_pool_spec`` mapped over a paged-pool pytree (block tables and
-    other integer leaves replicate)."""
-    def one(leaf):
+    """``page_pool_spec`` mapped over a paged-pool pytree; int8-pool scale
+    leaves (``k_scale``/``v_scale``) take ``page_scale_spec``; block tables
+    and other integer leaves replicate."""
+    def one(key_path, leaf):
         shape = getattr(leaf, "shape", ())
+        name = str(getattr(key_path[-1], "key", key_path[-1])) \
+            if key_path else ""
+        if name in POOL_SCALES:
+            return page_scale_spec(shape, mesh)
+        if name in ("k", "v"):                   # pool payloads shard by
+            return page_pool_spec(shape, mesh)   # shape even when int8
         if np.issubdtype(np.dtype(getattr(leaf, "dtype", np.float32)),
                          np.integer):
             return P()
         return page_pool_spec(shape, mesh)
-    return jax.tree.map(one, pool)
+    return jax.tree_util.tree_map_with_path(one, pool)
 
 
 def logits_spec(mesh, global_batch: int, vocab: int) -> P:

@@ -70,7 +70,8 @@ def paged_gather(pool, table, mode: str | None = None):
 
 
 def paged_attention(q, pool_k, pool_v, table, positions, *, scale=None,
-                    softcap=0.0, mode: str | None = None):
+                    softcap=0.0, k_scale=None, v_scale=None,
+                    mode: str | None = None):
     """Fused paged flash-decode: stream pool pages through online-softmax.
 
     q: (B, Hq, D) one decode query per slot; pool: (P, page, Hkv, D);
@@ -84,14 +85,21 @@ def paged_attention(q, pool_k, pool_v, table, positions, *, scale=None,
     masking semantics, O(page) working set under pure XLA; serving-only —
     not reverse-differentiable); kernel modes run the scalar-prefetch
     Pallas flash-decode kernel (kernels/paged_attention.py).
+
+    ``k_scale``/``v_scale`` ((P, Hkv) f32, both or neither) select the
+    QUANTIZED lane: the pool leaves are int8 (repro.quant) and every
+    lowering dequantizes page chunks in-register beside the m/l/acc carry
+    — attention HBM traffic is measured in int8 bytes.
     """
     mode = mode or kernel_mode()
     if mode == "off":
         return _pa.paged_attention_stream(q, pool_k, pool_v, table,
                                           positions, scale=scale,
-                                          softcap=softcap)
+                                          softcap=softcap,
+                                          k_scale=k_scale, v_scale=v_scale)
     return _pa.paged_attention_kernel(q, pool_k, pool_v, table, positions,
                                       scale=scale, softcap=softcap,
+                                      k_scale=k_scale, v_scale=v_scale,
                                       interpret=(mode == "interpret"))
 
 

@@ -53,10 +53,16 @@ BLOCK_PAGES = 4
 # ---------------------------------------------------------------------------
 def paged_attention_stream(q, pool_k, pool_v, table, positions, *,
                            scale=None, softcap: float = 0.0,
-                           block_pages: int = BLOCK_PAGES) -> jax.Array:
+                           block_pages: int = BLOCK_PAGES,
+                           k_scale=None, v_scale=None) -> jax.Array:
     """q: (B, Hq, D); pool: (P, page, Hkv, D); table: (B, maxp) int32 page
     ids; positions: (B,) int32 per-slot absolute position of the decode
     token (-1 = idle slot, fully masked).  Returns (B, Hq, D) in q.dtype.
+
+    ``k_scale``/``v_scale`` (both (P, Hkv) f32, or both None) enable the
+    quantized lane: the pool leaves are int8 and each streamed page chunk
+    is dequantized IN-REGISTER right next to the m/l/acc carry — HBM
+    traffic stays int8 bytes, the softmax recurrence stays f32.
 
     The streaming loop is a ``lax.while_loop`` bounded by the LIVE page
     count (``max(positions) + 1`` over the batch), not the table width: a
@@ -91,6 +97,9 @@ def paged_attention_stream(q, pool_k, pool_v, table, positions, *,
         pids = jax.lax.dynamic_slice_in_dim(table, j * bp, bp, 1)  # (B, bp)
         kc = pool_k[pids].astype(jnp.float32)    # (B, bp, page, Hkv, D)
         vc = pool_v[pids].astype(jnp.float32)
+        if k_scale is not None:                  # int8 lane: dequantize the
+            kc = kc * k_scale[pids][:, :, None, :, None]   # chunk in-register
+            vc = vc * v_scale[pids][:, :, None, :, None]
         kc = kc.reshape(B, bp * page, Hkv, D)
         vc = vc.reshape(B, bp * page, Hkv, D)
         s = jnp.einsum("bhgd,bkhd->bhgk", qh, kc)
@@ -117,8 +126,12 @@ def paged_attention_stream(q, pool_k, pool_v, table, positions, *,
 # ---------------------------------------------------------------------------
 # Pallas kernel ('interpret' / 'tpu' dispatch)
 # ---------------------------------------------------------------------------
-def _pa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-               m_scr, l_scr, acc_scr, *, scale, softcap, page, maxp):
+def _pa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *refs,
+               scale, softcap, page, maxp, quantized):
+    if quantized:                                # int8 lane: per-(page, head)
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs   # scales ride
+    else:                                        # tiny (1, 1) VMEM blocks
+        o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     jp = pl.program_id(2)                        # sequential page dim
 
@@ -137,6 +150,9 @@ def _pa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)                 # (page, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:                            # dequantize in VMEM, right
+            k = k * ks_ref[0, 0]                 # next to the m/l/acc carry
+            v = v * vs_ref[0, 0]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, page)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
@@ -164,28 +180,41 @@ def _pa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention_kernel(q, pool_k, pool_v, table, positions, *,
                            scale=None, softcap: float = 0.0,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           k_scale=None, v_scale=None) -> jax.Array:
     """Same contract as ``paged_attention_stream``; grid (B, Hkv, maxp) with
     the page dim sequential, block table + positions scalar-prefetched so
-    the page id is known before each step's pool DMA issues."""
+    the page id is known before each step's pool DMA issues.  With
+    ``k_scale``/``v_scale`` ((P, Hkv) f32) the pool is int8: each step's
+    page DMA moves int8 bytes and the (1, 1) scale block for that
+    (page, head) rides along, dequantizing in VMEM."""
     _, page, Hkv, D = pool_k.shape
     B, maxp = table.shape
     Hq = q.shape[1]
     G = Hq // Hkv
     scale = scale if scale is not None else D ** -0.5
     qh = q.reshape(B, Hkv, G, D)
+    quantized = k_scale is not None
+
+    pool_spec = pl.BlockSpec((1, page, 1, D),
+                             lambda b, h, jp, tref, pref: (tref[b, jp], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda b, h, jp, tref, pref: (b, h, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [qh, pool_k, pool_v]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, 1), lambda b, h, jp, tref, pref: (tref[b, jp], h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # (table, positions)
         grid=(B, Hkv, maxp),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, jp, tref, pref: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, jp, tref, pref: (tref[b, jp], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, jp, tref, pref: (tref[b, jp], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, h, jp, tref, pref: (b, h, 0, 0)),
         scratch_shapes=[
@@ -195,11 +224,11 @@ def paged_attention_kernel(q, pool_k, pool_v, table, positions, *,
         ],
     )
     kern = functools.partial(_pa_kernel, scale=scale, softcap=softcap,
-                             page=page, maxp=maxp)
+                             page=page, maxp=maxp, quantized=quantized)
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(table, positions, qh, pool_k, pool_v)
+    )(table, positions, *operands)
     return out.reshape(B, Hq, D)

@@ -15,6 +15,7 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
 from ..models.registry import build_model
+from ..quant import QuantPolicy
 from ..serve.engine import ContinuousEngine, Engine, Request
 from ..serve.kvcache import servable_reasons
 
@@ -46,6 +47,17 @@ def main():
                     choices=["stream", "gather"],
                     help="continuous: fused paged flash-decode (default) or "
                          "the legacy gather-then-attend oracle path")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="continuous: paged KV-pool storage dtype; int8 "
+                         "adds per-(page, head) absmax scales and halves-"
+                         "to-quarters pool bytes (repro.quant)")
+    ap.add_argument("--quant-weights", action="store_true",
+                    help="quantize the precomputed spectral weight planes "
+                         "to fixed point (per-block-row absmax scales)")
+    ap.add_argument("--weight-bits", type=int, default=8, choices=[8, 4],
+                    help="with --quant-weights: int8 planes or the packed-"
+                         "int4 stretch mode (two nibbles per byte)")
     ap.add_argument("--decode-mode", default="scan",
                     choices=["scan", "per_token"],
                     help="batch engine: device-resident loop (default) or "
@@ -61,6 +73,9 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_seq = 64 + args.new_tokens
+    quant = QuantPolicy(kv_dtype=args.kv_dtype,
+                        quant_weights=args.quant_weights,
+                        weight_bits=args.weight_bits)
     if args.engine == "continuous":
         reasons = servable_reasons(cfg)
         if reasons:
@@ -73,13 +88,19 @@ def main():
             max_tokens_in_flight=args.max_tokens_in_flight,
             decode_chunk=args.decode_chunk, sample=args.sample,
             seed=args.seed, eos_id=args.eos_id,
-            precompute=not args.no_precompute, paged_attn=args.paged_attn)
+            precompute=not args.no_precompute, paged_attn=args.paged_attn,
+            quant=quant)
     else:
+        if args.kv_dtype != "f32":
+            print(f"[launch.serve] note: --kv-dtype {args.kv_dtype} applies "
+                  f"to the continuous engine's paged pool; the batch "
+                  f"engine's dense cache stays f32 (parity oracle)")
         engine = Engine(cfg, params, max_batch=args.max_batch,
                         max_seq=max_seq, sample=args.sample,
                         precompute=not args.no_precompute,
                         decode_mode=args.decode_mode, eos_id=args.eos_id,
-                        seed=args.seed, bucket_prompts=not args.no_bucket)
+                        seed=args.seed, bucket_prompts=not args.no_bucket,
+                        quant=quant)
     rng = np.random.RandomState(0)
     # prompts cover the smoke sliding window (16): the ring-buffer prefill
     # keeps the window tail and needs S >= window for SWA archs
@@ -109,6 +130,10 @@ def main():
               f"attn_bytes/token={st['attention_bytes_per_token'] / 1e6:.2f}MB "
               f"peak_attn={st['peak_attention_bytes'] / 1e6:.2f}MB "
               f"decode_peak_est={st['decode_peak_bytes_est'] / 1e6:.1f}MB")
+        qp = st["quant_policy"]
+        print(f"[launch.serve] quant: kv_dtype={qp['kv_dtype']} "
+              f"weights={'int' + str(qp['weight_bits']) if qp['quant_weights'] else 'f32'} "
+              f"kv_pool_bytes={st['kv_pool_bytes'] / 1e6:.1f}MB")
     else:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "

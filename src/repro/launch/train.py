@@ -52,8 +52,10 @@ def main():
     with dist_ctx.activation_policy(mesh_lib.make_host_mesh()):
         state = trainer.run()
     n = sum(p.size for p in jax.tree.leaves(state["params"]))
+    loss = (f"{trainer.history[-1]['loss']:.4f}" if trainer.history
+            else "n/a (fewer steps than log_every)")
     print(f"[launch.train] {args.arch}: {int(state['step'])} steps, "
-          f"{n:,} params, loss {trainer.history[-1]['loss']:.4f}")
+          f"{n:,} params, loss {loss}")
 
 
 if __name__ == "__main__":

@@ -263,27 +263,43 @@ def attention_block(params, x, *, cfg, causal=True, window=0,
         assert S == 1, "paged KV path is decode-only (S == 1)"
         assert not window, "paged KV path serves linear caches only"
         pool_k, pool_v = cache["k"], cache["v"]
+        k_sc = v_sc = None
         page = pool_k.shape[1]
         maxp = block_table.shape[1]
         col = jnp.minimum(q_pos0 // page, maxp - 1)
         pid = jnp.where(cache_pos >= 0,
                         block_table[jnp.arange(B), col], 0)   # 0 = trash page
         off = q_pos0 % page
-        pool_k = pool_k.at[pid, off].set(k[:, 0].astype(pool_k.dtype))
-        pool_v = pool_v.at[pid, off].set(v[:, 0].astype(pool_v.dtype))
-        new_cache = {"k": pool_k, "v": pool_v}
+        if "k_scale" in cache:                   # int8 pool (repro.quant):
+            from ..quant import codec as qcodec  # per-(page, head) absmax
+            pool_k, k_sc = qcodec.page_scatter(  # scatter, requantize-on-grow
+                pool_k, cache["k_scale"], pid, off, k[:, 0])
+            pool_v, v_sc = qcodec.page_scatter(
+                pool_v, cache["v_scale"], pid, off, v[:, 0])
+            new_cache = {"k": pool_k, "v": pool_v,
+                         "k_scale": k_sc, "v_scale": v_sc}
+        else:
+            pool_k = pool_k.at[pid, off].set(k[:, 0].astype(pool_k.dtype))
+            pool_v = pool_v.at[pid, off].set(v[:, 0].astype(pool_v.dtype))
+            new_cache = {"k": pool_k, "v": pool_v}
         if paged_impl == "stream":
             # fused paged flash-decode: pages stream through the online
-            # softmax; the gathered (B, maxp*page, Hkv, D) view is never
-            # formed.  Idle slots (cache_pos == -1) come back exactly zero,
-            # the same rows the masked gather path produced.
+            # softmax (dequantizing in-register on the int8 lane); the
+            # gathered (B, maxp*page, Hkv, D) view is never formed.  Idle
+            # slots (cache_pos == -1) come back exactly zero, the same
+            # rows the masked gather path produced.
             qd = shard_heads(q[:, 0])
             streamed = shard_heads(kops.paged_attention(
                 qd, pool_k, pool_v, block_table, cache_pos,
-                softcap=a.logit_softcap))[:, None]
+                softcap=a.logit_softcap, k_scale=k_sc, v_scale=v_sc))[:, None]
         else:
             k = kops.paged_gather(pool_k, block_table)
             v = kops.paged_gather(pool_v, block_table)
+            if k_sc is not None:                 # dequantize the gathered
+                rep = lambda s: jnp.repeat(     # view: page scales repeat
+                    s[block_table], page, axis=1)[..., None]  # per offset
+                k = k.astype(jnp.float32) * rep(k_sc)
+                v = v.astype(jnp.float32) * rep(v_sc)
             idx = jnp.arange(k.shape[1])[None, :]
             kv_positions = jnp.where(idx <= cache_pos[:, None], idx, -1)
     elif cache is not None and cross_kv is None:

@@ -1,0 +1,23 @@
+"""repro.quant — fixed-point inference quantization for the serving stack.
+
+The paper's algorithm-hardware co-optimization pairs block-circulant
+compression with a fixed-point datapath; this package is the fixed-point
+half for the reproduction's serving stack: an absmax int8/int4 codec over
+the precomputed spectral weight planes and the paged KV-cache pool
+(``codec``), and an offline calibration + f32-parity harness
+(``calibrate``).  ``QuantPolicy`` is the single config object engines
+thread through `serve/kvcache.build_pool`, `serve/params`, and the
+attention kernels.
+"""
+from .codec import (QuantPolicy, absmax_scale, dequantize, pack_int4,
+                    page_scatter, plane_from_cache, quantize,
+                    quantize_page_block, quantize_plane,
+                    quantize_plane_cache, quantize_serving_params,
+                    unpack_int4)
+
+__all__ = [
+    "QuantPolicy", "absmax_scale", "dequantize", "pack_int4",
+    "page_scatter", "plane_from_cache", "quantize", "quantize_page_block",
+    "quantize_plane", "quantize_plane_cache", "quantize_serving_params",
+    "unpack_int4",
+]

@@ -139,7 +139,8 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
         last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
                                             keepdims=False)
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        pool = kvc.pack_prefill_cache(pool, dense, pages, page_size)
+        pool = kvc.pack_prefill_cache(pool, dense, pages, page_size,
+                                      true_len=true_len)
         return nxt, pool
     return prefill_pack
 

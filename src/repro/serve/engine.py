@@ -42,6 +42,7 @@ from ..dist import sharding as dist_sharding
 from ..launch import mesh as mesh_lib
 from ..models import transformer as tfm
 from ..models.registry import build_model
+from ..quant.codec import QuantPolicy
 from . import decode as dec
 from . import kvcache as kvc
 from .params import precompute_serving_params
@@ -60,10 +61,14 @@ class Engine:
                  max_seq: int = 256, sample: bool = False, mesh=None,
                  precompute: bool = True, decode_mode: str = "scan",
                  eos_id: Optional[int] = None, temperature: float = 1.0,
-                 seed: int = 0, bucket_prompts: bool = True):
+                 seed: int = 0, bucket_prompts: bool = True,
+                 quant: Optional[QuantPolicy] = None):
         assert decode_mode in ("scan", "per_token"), decode_mode
         self.cfg = cfg
-        self.params = (precompute_serving_params(params, cfg)
+        self.quant = quant or QuantPolicy()
+        # the batch engine's dense cache stays float32 (it is the f32
+        # parity ORACLE); only the weight half of the policy applies here
+        self.params = (precompute_serving_params(params, cfg, self.quant)
                        if precompute else params)
         self.model = build_model(cfg)
         self.max_batch = max_batch
@@ -251,7 +256,8 @@ class ContinuousEngine:
                  decode_chunk: int = 8, sample: bool = False,
                  temperature: float = 1.0, seed: int = 0,
                  eos_id: Optional[int] = None, mesh=None,
-                 precompute: bool = True, paged_attn: str = "stream"):
+                 precompute: bool = True, paged_attn: str = "stream",
+                 quant: Optional[QuantPolicy] = None):
         if paged_attn not in ("stream", "gather"):
             raise ValueError(f"paged_attn {paged_attn!r}: "
                              f"expected 'stream' or 'gather'")
@@ -260,7 +266,8 @@ class ContinuousEngine:
             raise ValueError(f"{cfg.name} is not continuous-servable: "
                              f"{'; '.join(reasons)} — use Engine")
         self.cfg = cfg
-        self.params = (precompute_serving_params(params, cfg)
+        self.quant = quant or QuantPolicy()
+        self.params = (precompute_serving_params(params, cfg, self.quant)
                        if precompute else params)
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -296,7 +303,7 @@ class ContinuousEngine:
         # would replicate the whole pool over the data-parallel devices
         num_pages = dist_sharding.dp_round_up(num_pages, self.mesh)
         self.num_pages = num_pages
-        self.pool = kvc.build_pool(cfg, num_pages, page_size)
+        self.pool = kvc.build_pool(cfg, num_pages, page_size, self.quant)
         # pin the pool to its derived layout (pages over DP, heads over
         # "model" — the dense cache's placement, see dist/sharding.py);
         # trivial on the 1-device host mesh, load-bearing on real meshes
@@ -463,6 +470,8 @@ class ContinuousEngine:
         st["tokens_per_s"] = st["tokens"] / max(
             st["prefill_s"] + st["decode_s"], 1e-9)
         st["pool_bytes"] = kvc.pool_bytes(self.pool)
+        st["kv_pool_bytes"] = st["pool_bytes"]     # quant-satellite alias
+        st["quant_policy"] = self.quant.describe()
         st["prefill_buckets"] = sorted(self._prefills)
         st["attention_impl"] = self.paged_attn
         st.update(kvc.attention_memory_est(

@@ -34,6 +34,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models.registry import build_model
+from ..quant.codec import QuantPolicy, quantize_page_block
 
 TRASH_PAGE = 0
 
@@ -164,7 +165,7 @@ def servable_reasons(cfg: ArchConfig) -> List[str]:
 
 
 def build_pool(cfg: ArchConfig, num_pages: int, page_size: int,
-               dtype=jnp.float32):
+               policy: Optional[QuantPolicy] = None):
     """Paged pool pytree mirroring ``model.init_cache``'s structure.
 
     Every attention cache leaf ``{"k": (n, B, S, Hkv, D), "v": ..., "pos"}``
@@ -172,18 +173,32 @@ def build_pool(cfg: ArchConfig, num_pages: int, page_size: int,
     shared pool per layer, indexed by the same block table at every layer
     (a logical page id is valid for the whole stack).  The "pos" leaf is
     dropped: validity is carried by the per-slot position vector.
+
+    The storage dtype is a first-class ``QuantPolicy`` field
+    (``policy.kv_dtype``: "f32" default | "bf16" | "int8").  An int8 pool
+    additionally carries per-(page, head) absmax scales next to each leaf
+    (``{"k", "v", "k_scale", "v_scale"}`` — scales are f32
+    ``(n, num_pages, Hkv)``, written by the prefill pack and the decode
+    page-scatter, read by the quantized paged-attention lane).
     """
+    policy = policy or QuantPolicy()
     if servable_reasons(cfg):
         raise ValueError(f"{cfg.name}: not paged-servable: "
                          f"{'; '.join(servable_reasons(cfg))}")
+    dtype = policy.pool_dtype
     struct = jax.eval_shape(
-        lambda: build_model(cfg).init_cache(1, page_size, dtype=dtype))
+        lambda: build_model(cfg).init_cache(1, page_size, dtype=jnp.float32))
 
     def transform(node):
         if _is_kv_leaf(node):
             n, _, _, hkv, d = node["k"].shape
             shape = (n, num_pages, page_size, hkv, d)
-            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+            out = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+            if policy.kv_quantized:
+                sshape = (n, num_pages, hkv)
+                out["k_scale"] = jnp.zeros(sshape, jnp.float32)
+                out["v_scale"] = jnp.zeros(sshape, jnp.float32)
+            return out
         if isinstance(node, dict):
             return {k: transform(v) for k, v in node.items()}
         if isinstance(node, (list, tuple)):
@@ -193,12 +208,23 @@ def build_pool(cfg: ArchConfig, num_pages: int, page_size: int,
     return transform(struct)
 
 
-def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int):
+def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int,
+                       true_len=None):
     """Scatter a B=1 dense prefill cache into a slot's reserved pages.
 
     ``dense_cache`` leaves are (n, 1, Spad, Hkv, D) with Spad a multiple of
     ``page_size``; ``pages`` is (Spad // page_size,) int32.  Pure function
     (jit with the pool donated); returns the updated pool tree.
+
+    An int8 pool (``k_scale`` present) quantizes each prefill page whole:
+    one absmax scale per (page, head) over the page's Spad slice.  With
+    ``true_len`` (the unpadded prompt length, traced scalar) the right-pad
+    tail is ZEROED before the scale derivation — pad positions hold real
+    K/V activations whose magnitude would otherwise inflate the last
+    page's scale and with it the quantization error of every real token
+    sharing that page (the tail itself stays position-masked on read and
+    is overwritten by decode either way).  Unquantized pools ignore
+    ``true_len`` (garbage tail values are free when no scale reads them).
     """
     def pack(pnode, dnode):
         if _is_kv_leaf(pnode):
@@ -208,8 +234,19 @@ def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int):
                 n, _, spad, hkv, d = leaf.shape
                 npg = spad // page_size
                 vals = leaf.reshape(n, npg, page_size, hkv, d)
-                vals = vals.astype(pnode[key].dtype)
-                out[key] = pnode[key].at[:, pages].set(vals)
+                if key + "_scale" in pnode:             # int8 pool
+                    if true_len is not None:
+                        valid = (jnp.arange(spad) < true_len).reshape(
+                            npg, page_size)
+                        vals = jnp.where(
+                            valid[None, :, :, None, None], vals, 0.0)
+                    qvals, scales = quantize_page_block(vals)
+                    out[key] = pnode[key].at[:, pages].set(qvals)
+                    out[key + "_scale"] = pnode[
+                        key + "_scale"].at[:, pages].set(scales)
+                else:
+                    vals = vals.astype(pnode[key].dtype)
+                    out[key] = pnode[key].at[:, pages].set(vals)
             return out
         if isinstance(pnode, dict):
             return {k: pack(v, dnode[k]) for k, v in pnode.items()}
@@ -221,9 +258,20 @@ def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int):
 
 
 def pool_bytes(pool) -> int:
-    """Total bytes of the device pool (telemetry)."""
+    """Total bytes of the device pool (telemetry; includes quantization
+    scales when the pool is int8 — works on ShapeDtypeStructs too)."""
     return sum(int(leaf.size) * np.dtype(leaf.dtype).itemsize
                for leaf in jax.tree.leaves(pool))
+
+
+def page_bytes(cfg: ArchConfig, page_size: int,
+               policy: Optional[QuantPolicy] = None) -> int:
+    """Bytes one page costs across every layer of the stack (scales
+    included for int8).  Zero allocation (eval_shape); the equal-KV-memory
+    benchmarks use this to size pools of different dtypes to one byte
+    budget: ``num_pages = budget // page_bytes(...)``."""
+    return pool_bytes(jax.eval_shape(
+        lambda: build_pool(cfg, 1, page_size, policy)))
 
 
 def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,
@@ -243,6 +291,10 @@ def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,
       views of the widest layer, the streamed path holds one
       ``BLOCK_PAGES``-page chunk per slot (the 'off' scan streams that many
       pages per step — kernels/paged_attention.py).
+
+    Byte terms follow the pool leaf dtype, so an int8 pool's traffic is
+    counted in int8 bytes (the per-(page, head) scale reads are < 1% of
+    the K/V bytes and excluded).
     """
     from ..kernels.paged_attention import BLOCK_PAGES
     per_pos, widest = 0, 0

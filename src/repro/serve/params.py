@@ -56,12 +56,17 @@ def _same_block(nodes) -> bool:
                for s in shapes)
 
 
-def precompute_serving_params(params, cfg: ArchConfig):
+def precompute_serving_params(params, cfg: ArchConfig, policy=None):
     """Bake spectral serving caches into a parameter tree (pure transform).
 
     Returns a new tree with the same original leaves plus the cache entries;
     idempotent (already-baked subtrees are left alone).  Works under
     ``jax.eval_shape`` (the dry-run bakes shape-structs, no allocation).
+
+    With a ``repro.quant.QuantPolicy`` whose ``quant_weights`` is set, the
+    baked planes are additionally quantized to int8 (or int4-packed) with
+    per-block-row scales — the fixed-point serving weights of the paper's
+    hardware half (see docs/quantization.md).
     """
     comp = cfg.compression
     if not comp.enabled:
@@ -117,7 +122,11 @@ def precompute_serving_params(params, cfg: ArchConfig):
             return type(node)(bake(v, name, shadowed) for v in node)
         return node
 
-    return bake(params)
+    baked = bake(params)
+    if policy is not None and getattr(policy, "quant_weights", False):
+        from ..quant.codec import quantize_serving_params
+        baked = quantize_serving_params(baked, policy.weight_bits)
+    return baked
 
 
 def strip_serving_params(params):
