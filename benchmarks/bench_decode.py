@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models.registry import build_model
+from repro.obs.metrics import Histogram
 from repro.serve.engine import Engine, Request
 from repro.serve.params import serving_cache_bytes
 
@@ -62,7 +63,7 @@ def bench_mode(cfg, params, *, decode_mode: str, precompute: bool,
         "precompute": precompute,
         "tokens_per_batch": toks,
         "decode_s_best": best,
-        "decode_s_median": sorted(decode_s)[len(decode_s) // 2],
+        "decode_s_median": Histogram.of(decode_s).percentile(50),
         "prefill_s_best": min(prefill_s),
         "tokens_per_s": toks / best,
         "spectral_cache_bytes": (serving_cache_bytes(eng.params)

@@ -30,6 +30,12 @@ sized to the f32 byte budget, slots scaled to fill it — the int8 pool
 (+absmax scales) carries ~4x the f32 slots and ~2x the bf16 slots at
 equal memory (bench_quant.py adds the accuracy-parity side of the trade).
 
+A fourth, ``obs_overhead``, prices the repro.obs telemetry layer itself:
+the same saturated drain with traces/histograms enabled vs disabled
+(the budget is <1% tokens/s).  Poisson latencies are consumed from the
+engine's request traces and cross-checked against the legacy per-result
+computation.
+
   PYTHONPATH=src python benchmarks/bench_serving.py --requests 24 \
       --out BENCH_serving.json
   PYTHONPATH=src python benchmarks/bench_serving.py --smoke
@@ -45,6 +51,8 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models.registry import build_model
+from repro.obs import Obs
+from repro.obs.metrics import Histogram
 from repro.serve.engine import ContinuousEngine, Engine, Request
 from repro.serve.kvcache import pages_for
 
@@ -56,18 +64,20 @@ except ImportError:                    # standalone (python benchmarks/...)
 
 def _metrics(latencies, tokens: int, makespan: float) -> dict:
     """Latency percentiles only when genuine per-request latencies exist
-    (Poisson mode); saturated drains report throughput alone."""
+    (Poisson mode); saturated drains report throughput alone.  Percentiles
+    come from ``repro.obs.metrics.Histogram`` (numpy linear-interp
+    semantics) — the same definition the engines' telemetry uses."""
     out = {
         "tokens": int(tokens),
         "makespan_s": makespan,
         "tokens_per_s": tokens / max(makespan, 1e-9),
     }
     if latencies is not None:
-        lat = np.asarray(latencies)
+        h = Histogram.of(latencies)
         out.update({
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
-            "mean_latency_s": float(lat.mean()),
+            "p50_latency_s": h.percentile(50),
+            "p99_latency_s": h.percentile(99),
+            "mean_latency_s": h.sum / h.count,
         })
     return out
 
@@ -136,14 +146,62 @@ def bench_batch_poisson(cfg, params, reqs, arrivals, *, max_batch, max_seq,
 
 def bench_continuous_poisson(cfg, params, reqs, arrivals,
                              *, engine_kw) -> dict:
-    eng = ContinuousEngine(cfg, params, **engine_kw)
+    """Latencies come from the engine's request TRACES (repro.obs), not a
+    bench-side recomputation — cross-checked below against the per-result
+    latency fields (numpy percentile), which must agree exactly since the
+    engine derives both from the same trace timeline."""
+    eng = ContinuousEngine(cfg, params, obs=Obs(), **engine_kw)
     eng.generate(reqs)                                  # compile + warm
+    eng.obs.traces.clear()                 # warm-pass traces out of the window
     t0 = time.perf_counter()
     out = eng.generate(reqs, arrival_times=arrivals)
     makespan = time.perf_counter() - t0
     tokens = sum(r["decode_len"] for r in out)
-    return {**_metrics([r["latency_s"] for r in out], tokens, makespan),
-            "stats": eng.stats()}
+    traces = list(eng.obs.traces.completed)
+    assert len(traces) == len(reqs), (len(traces), len(reqs))
+    met = _metrics([tr.latency_s for tr in traces], tokens, makespan)
+    legacy_p99 = float(np.percentile([r["latency_s"] for r in out], 99))
+    assert abs(met["p99_latency_s"] - legacy_p99) <= 1e-9 * max(
+        legacy_p99, 1.0), (met["p99_latency_s"], legacy_p99)
+    met["p99_latency_s_legacy"] = legacy_p99
+    met["p99_ttft_s"] = Histogram.of(
+        [tr.ttft_s for tr in traces]).percentile(99)
+    tpots = [tr.tpot_s for tr in traces if tr.tpot_s is not None]
+    met["p99_tpot_s"] = (Histogram.of(tpots).percentile(99)
+                         if tpots else None)
+    return {**met, "stats": eng.stats()}
+
+
+def bench_obs_overhead(cfg, params, reqs, *, engine_kw, iters) -> dict:
+    """Saturated continuous drains with the obs layer enabled vs disabled
+    (``Obs(enabled=False)``: counters stay live — they back stats() — but
+    traces/histograms/scale reads are skipped).  Records the tokens/s
+    fraction the full telemetry path costs; the budget is <1%.
+
+    The budget is smaller than this host's run-to-run noise (min-of-N
+    drain times swing several percent), so the estimator is PAIRED: each
+    round times both engines back-to-back (same noise window) and the
+    overhead is the median of the per-round time ratios — slow drift
+    cancels instead of landing on whichever mode ran during it."""
+    engines = {mode: ContinuousEngine(
+        cfg, params, obs=Obs(enabled=(mode == "enabled")), **engine_kw)
+        for mode in ("enabled", "disabled")}
+    for eng in engines.values():
+        eng.generate(reqs)                              # compile + warm
+    best, tokens, ratios = {}, {}, []
+    for _ in range(max(iters, 8)):
+        dt = {}
+        for mode, eng in engines.items():
+            t0 = time.perf_counter()
+            res = eng.generate(reqs)
+            dt[mode] = time.perf_counter() - t0
+            tokens[mode] = sum(r["decode_len"] for r in res)
+            best[mode] = min(best.get(mode, dt[mode]), dt[mode])
+        ratios.append(dt["enabled"] / dt["disabled"])
+    out = {mode: _metrics(None, tokens[mode], best[mode])
+           for mode in engines}
+    out["overhead_frac"] = Histogram.of(ratios).percentile(50) - 1.0
+    return out
 
 
 def main(argv=None):
@@ -213,12 +271,16 @@ def main(argv=None):
         "continuous": bench_continuous_poisson(
             cfg, params, reqs, arrivals, engine_kw=engine_kw),
     }
+    rows["obs_overhead"] = bench_obs_overhead(
+        cfg, params, reqs, engine_kw=engine_kw, iters=args.iters)
     for section, modes in rows.items():
         for name, r in modes.items():
-            lat = ("" if "p50_latency_s" not in r else
-                   f", p50 {r['p50_latency_s'] * 1e3:6.0f}ms"
+            if not isinstance(r, dict):
+                continue
+            lat = ("" if "p50_latency_s" not in r or r["p50_latency_s"] is
+                   None else f", p50 {r['p50_latency_s'] * 1e3:6.0f}ms"
                    f", p99 {r['p99_latency_s'] * 1e3:6.0f}ms")
-            print(f"[bench_serving] {section:>9}/{name:<15} "
+            print(f"[bench_serving] {section:>12}/{name:<15} "
                   f"{r['tokens_per_s']:7.1f} tok/s{lat}", flush=True)
 
     sat, poi, kvm = rows["saturated"], rows["poisson"], rows["kv_equal_memory"]
@@ -248,6 +310,7 @@ def main(argv=None):
                                        / kvm["f32"]["slots"]),
         "kv_slots_ratio_int8_vs_bf16": (kvm["int8"]["slots"]
                                         / kvm["bf16"]["slots"]),
+        "obs_overhead_frac": rows["obs_overhead"]["overhead_frac"],
     }
     print(f"[bench_serving] saturated: continuous/batch = "
           f"{result['speedup_continuous_vs_batch']:.2f}x tokens/s, "
@@ -261,6 +324,9 @@ def main(argv=None):
           f"{result['kv_slots_ratio_int8_vs_f32']:.2f}x the f32 slots / "
           f"{result['kv_slots_ratio_int8_vs_bf16']:.2f}x the bf16 slots "
           f"({slot_counts})")
+    print(f"[bench_serving] obs overhead: "
+          f"{result['obs_overhead_frac'] * 100:+.2f}% tokens/s "
+          f"(enabled vs disabled telemetry)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

@@ -16,10 +16,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compression import LayerCost
+from repro.obs.metrics import Histogram
 
 
 def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
-    """Median wall-clock µs per call (jit'd, block_until_ready)."""
+    """Median wall-clock µs per call (jit'd, block_until_ready).  The
+    percentile comes from ``repro.obs.metrics.Histogram`` — ONE percentile
+    definition (numpy linear interpolation) across benches and the serving
+    telemetry, instead of per-bench hand-rolled medians."""
     out = fn(*args)
     jax.block_until_ready(out)
     for _ in range(warmup - 1):
@@ -29,8 +33,7 @@ def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return Histogram.of(times).percentile(50) * 1e6
 
 
 def emit(rows: List[Dict], header: List[str]):

@@ -15,6 +15,7 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
 from ..models.registry import build_model
+from ..obs import Obs
 from ..quant import QuantPolicy
 from ..serve.engine import ContinuousEngine, Engine, Request
 from ..serve.kvcache import servable_reasons
@@ -66,6 +67,16 @@ def main():
                     help="batch engine: disable prompt-length bucketing")
     ap.add_argument("--no-precompute", action="store_true",
                     help="skip the offline spectral-weight pass")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write repro.obs JSONL telemetry (registry "
+                         "snapshots + per-request traces) to FILE; validate "
+                         "with python -m repro.obs.emit --validate FILE")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="with --metrics-out: flush every N engine "
+                         "dispatches (default 10)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable traces/histograms (counters stay live; "
+                         "the zero-overhead telemetry path)")
     args = ap.parse_args()
 
     getter = get_config if args.full else get_smoke_config
@@ -76,6 +87,8 @@ def main():
     quant = QuantPolicy(kv_dtype=args.kv_dtype,
                         quant_weights=args.quant_weights,
                         weight_bits=args.weight_bits)
+    obs = Obs(enabled=not args.no_obs, emit_path=args.metrics_out,
+              emit_every=args.metrics_every)
     if args.engine == "continuous":
         reasons = servable_reasons(cfg)
         if reasons:
@@ -89,7 +102,7 @@ def main():
             decode_chunk=args.decode_chunk, sample=args.sample,
             seed=args.seed, eos_id=args.eos_id,
             precompute=not args.no_precompute, paged_attn=args.paged_attn,
-            quant=quant)
+            quant=quant, obs=obs)
     else:
         if args.kv_dtype != "f32":
             print(f"[launch.serve] note: --kv-dtype {args.kv_dtype} applies "
@@ -100,7 +113,7 @@ def main():
                         precompute=not args.no_precompute,
                         decode_mode=args.decode_mode, eos_id=args.eos_id,
                         seed=args.seed, bucket_prompts=not args.no_bucket,
-                        quant=quant)
+                        quant=quant, obs=obs)
     rng = np.random.RandomState(0)
     # prompts cover the smoke sliding window (16): the ring-buffer prefill
     # keeps the window tail and needs S >= window for SWA archs
@@ -139,6 +152,13 @@ def main():
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "
               f"prefill/decode split={st['prefill_s']:.2f}s/"
               f"{st['decode_s']:.2f}s")
+    if args.metrics_out is not None:
+        engine.obs.close()                 # final snapshot + trailing traces
+        print(f"[launch.serve] metrics: {engine.obs.emitter.lines_written} "
+              f"lines -> {args.metrics_out}")
+    if not args.no_obs:
+        print("[launch.serve] obs summary:")
+        print(engine.obs.summary())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""repro.obs — unified metrics + request-trace telemetry for the serving
+stack (docs/observability.md).
+
+``Obs`` is the bundle the engines thread through: one ``Registry``
+(counters/gauges/histograms — the backing store of ``Engine.stats()`` and
+``ContinuousEngine.stats()``), one ``TraceStore`` (per-request
+enqueue→admit→first-token→retire timelines), and an optional step-driven
+JSONL ``Emitter`` (``launch/serve.py --metrics-out``).
+
+``enabled=False`` turns the obs layer into its cheap skeleton: counters
+and gauges stay live (they ARE ``stats()``, and a dict bump is the legacy
+cost), but traces, histograms, emitter ticks, and the quantized-pool
+scale reads are skipped — the engines guard those sites on
+``obs.enabled``, and ``bench_serving.py`` records the enabled-vs-disabled
+tokens/s delta (``obs_overhead``) so the layer's cost stays measured.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+from .emit import Emitter, validate_jsonl, validate_line
+from .metrics import (BYTES_BUCKETS, RATIO_BUCKETS, SECONDS_BUCKETS,
+                      Counter, Gauge, Histogram, Registry)
+from .trace import RequestTrace, TraceStore
+
+__all__ = ["Obs", "Registry", "Counter", "Gauge", "Histogram",
+           "RequestTrace", "TraceStore", "Emitter", "validate_line",
+           "validate_jsonl", "SECONDS_BUCKETS", "BYTES_BUCKETS",
+           "RATIO_BUCKETS"]
+
+
+class Obs:
+    """Registry + traces + optional emitter on one rebased monotonic clock."""
+
+    def __init__(self, *, enabled: bool = True,
+                 emit_path: Optional[str] = None,
+                 emit_callback: Optional[Callable[[Dict], None]] = None,
+                 emit_every: int = 10):
+        self.enabled = bool(enabled)
+        self.registry = Registry()
+        self.traces = TraceStore()
+        self._t0 = time.perf_counter()
+        self.emitter: Optional[Emitter] = None
+        if emit_path is not None or emit_callback is not None:
+            self.emitter = Emitter(self.registry, self.traces,
+                                   path=emit_path, callback=emit_callback,
+                                   every=emit_every, clock=self.now)
+
+    def now(self) -> float:
+        """Seconds on the obs clock (monotonic, 0 at Obs creation)."""
+        return time.perf_counter() - self._t0
+
+    def rebase(self, t_perf: float) -> float:
+        """A raw ``time.perf_counter()`` stamp on the obs clock — engines
+        time spans on perf_counter and rebase the marks they hand to
+        traces, so every trace shares one timeline."""
+        return t_perf - self._t0
+
+    # -- trace lifecycle (no-ops when disabled) ---------------------------
+    def trace_start(self, id: int, order: int, prompt_len: int,
+                    enqueue_s: float) -> Optional[RequestTrace]:
+        if not self.enabled:
+            return None
+        return self.traces.start(id, order, prompt_len, enqueue_s)
+
+    def trace_finish(self, trace: Optional[RequestTrace]) -> None:
+        """Validate + complete a trace and fold its derived latencies into
+        the standard histograms (one definition of TTFT/TPOT everywhere)."""
+        if trace is None or not self.enabled:
+            return
+        self.traces.finish(trace)
+        reg = self.registry
+        reg.histogram("trace.queue_s").observe(trace.queue_s)
+        reg.histogram("trace.ttft_s").observe(trace.ttft_s)
+        reg.histogram("trace.latency_s").observe(trace.latency_s)
+        if trace.tpot_s is not None:
+            reg.histogram("trace.tpot_s").observe(trace.tpot_s)
+
+    # -- emitter cadence --------------------------------------------------
+    def tick(self) -> None:
+        if self.enabled and self.emitter is not None:
+            self.emitter.tick()
+
+    def close(self) -> None:
+        if self.emitter is not None:
+            self.emitter.close()
+
+    # -- human-readable exit summary (launch/serve.py) --------------------
+    def summary(self) -> str:
+        lines = ["metric                              value"]
+        snap = self.registry.snapshot()
+        for section in ("counters", "gauges"):
+            for name, v in snap[section].items():
+                val = f"{v:.6g}" if isinstance(v, float) else str(v)
+                lines.append(f"{name:<35} {val}")
+        for name, h in snap["histograms"].items():
+            if not h["count"]:
+                continue
+            lines.append(
+                f"{name:<35} n={h['count']} p50={h['p50']:.4g} "
+                f"p99={h['p99']:.4g} max={h['max']:.4g}")
+        return "\n".join(lines)

@@ -1,0 +1,8 @@
+"""CLI entry: ``python -m repro.obs --validate metrics.jsonl``.
+
+Lives here (not in emit.py) so runpy does not re-execute a module the
+package ``__init__`` already imported.
+"""
+from .emit import main
+
+raise SystemExit(main())

@@ -1,0 +1,226 @@
+"""Process-local metrics registry: counters, gauges, fixed-bucket histograms.
+
+The paper's co-optimization loop is an accounting exercise — per-stage
+pipeline occupancy and resource utilization decide where the next cycle or
+byte goes.  This module is the software analogue's ledger: a tiny,
+dependency-free registry the serving stack bumps on its hot path.
+
+Design constraints (why this is not a metrics framework):
+
+* **Zero hot-path allocation.**  ``Counter.inc`` / ``Gauge.set`` are one
+  float add / store on an object the caller holds a direct reference to;
+  registry lookups (dict + tuple key) happen once, at wiring time.  No
+  locks (engines are single-threaded by design — the emitter is
+  step-driven, not a thread), no string formatting, no deps.
+* **Fixed buckets.**  ``Histogram`` counts into immutable bucket bounds
+  chosen at creation (log-spaced defaults for seconds/bytes/ratios), so
+  ``observe`` is a bisect + two adds.  Raw values are additionally retained
+  (bounded) so ``percentile`` can answer exactly — the benchmarks'
+  p50/p99 come from here instead of hand-rolled ``np.percentile`` copies.
+* **Snapshot/delta.**  ``Registry.snapshot()`` returns a plain JSON-able
+  dict (the emitter's line payload); ``delta`` subtracts two snapshots'
+  counters for rate windows.
+
+Metric names are dotted strings (``sched.admitted``); labels are optional
+keyword pairs that become part of the metric identity
+(``counter("sched.deferred", reason="pages")`` and ``reason="budget"`` are
+distinct series).  The flattened name is ``name{k=v,...}`` with labels
+sorted — one documented schema shared by every producer (docs/observability.md).
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Log-spaced defaults covering the ranges the serving stack observes.
+SECONDS_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2,
+                   5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+BYTES_BUCKETS = tuple(float(10 ** e) for e in range(3, 13))     # 1KB..1TB
+RATIO_BUCKETS = tuple(i / 10 for i in range(1, 11))             # 0.1..1.0
+
+
+def flat_name(name: str, labels: Tuple[Tuple[str, str], ...]) -> str:
+    """``name{k=v,...}`` with labels sorted; bare ``name`` when unlabeled."""
+    if not labels:
+        return name
+    return name + "{" + ",".join(f"{k}={v}" for k, v in labels) + "}"
+
+
+class Counter:
+    """Monotonic accumulator.  ``inc`` rejects negative deltas — counter
+    monotonicity is an invariant the tests (and any rate computation
+    downstream) rely on."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter decrement ({n}); use a Gauge")
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (queue depth, free pages); ``set`` overwrites,
+    ``max_seen`` tracks the high-water mark for peak telemetry."""
+    __slots__ = ("value", "max_seen")
+
+    def __init__(self):
+        self.value = 0.0
+        self.max_seen = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+        if v > self.max_seen:
+            self.max_seen = float(v)
+
+
+class Histogram:
+    """Fixed-bucket histogram + exact percentiles from retained values.
+
+    ``bounds`` are upper-inclusive bucket edges; values above the last edge
+    land in the implicit overflow bucket (``counts`` has ``len(bounds)+1``
+    entries).  Bucket counts serve the emitter (fixed-size, mergeable);
+    the raw values (retained up to ``keep``, FIFO) serve ``percentile``,
+    which matches ``numpy.percentile``'s default linear interpolation
+    exactly — so trace-derived bench numbers cannot drift from the legacy
+    computation they replaced.
+    """
+    __slots__ = ("bounds", "counts", "count", "sum", "min", "max",
+                 "_values", "_keep")
+
+    def __init__(self, bounds: Sequence[float] = SECONDS_BUCKETS,
+                 keep: int = 100_000):
+        if list(bounds) != sorted(bounds) or len(set(bounds)) != len(bounds):
+            raise ValueError(f"bucket bounds must be strictly increasing: "
+                             f"{bounds}")
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+        self._values: List[float] = []
+        self._keep = int(keep)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect_right(self.bounds, v)] += 1
+        self.count += 1
+        self.sum += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+        if len(self._values) < self._keep:
+            self._values.append(v)
+
+    def percentile(self, q: float) -> Optional[float]:
+        """q-th percentile (0..100), ``numpy.percentile`` linear-interp
+        semantics over the retained values; None when empty.  Falls back
+        to bucket-edge interpolation if the retention window overflowed
+        (counts beyond ``keep`` raw values)."""
+        if not self.count:
+            return None
+        if self.count <= len(self._values):
+            vals = sorted(self._values)
+            rank = (q / 100.0) * (len(vals) - 1)
+            lo = int(rank)
+            hi = min(lo + 1, len(vals) - 1)
+            return vals[lo] + (vals[hi] - vals[lo]) * (rank - lo)
+        # bucket interpolation: the edge below the target cumulative count
+        target = (q / 100.0) * self.count
+        seen = 0.0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target:
+                return (self.bounds[i] if i < len(self.bounds)
+                        else self.max)
+        return self.max
+
+    @staticmethod
+    def of(values: Sequence[float],
+           bounds: Sequence[float] = SECONDS_BUCKETS) -> "Histogram":
+        """Histogram over a finished value list (the benches' one-shot
+        percentile path: ``Histogram.of(lat).percentile(99)``)."""
+        h = Histogram(bounds, keep=max(len(values), 1))
+        for v in values:
+            h.observe(v)
+        return h
+
+    def to_dict(self) -> Dict:
+        return {
+            "buckets": list(self.bounds),
+            "counts": list(self.counts),
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p99": self.percentile(99),
+        }
+
+
+class Registry:
+    """Flat namespace of metrics; get-or-create, so wiring is idempotent.
+
+    The same (name, labels, kind) always returns the same object; asking
+    for an existing name as a different kind raises (one schema, no
+    shadowing).
+    """
+
+    def __init__(self):
+        self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                            object] = {}
+
+    def _get(self, kind, name: str, labels: Dict[str, str], **kw):
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        m = self._metrics.get(key)
+        if m is None:
+            m = kind(**kw)
+            self._metrics[key] = m
+        elif not isinstance(m, kind):
+            raise TypeError(f"metric {flat_name(*key)!r} already registered "
+                            f"as {type(m).__name__}, not {kind.__name__}")
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, bounds: Sequence[float] = SECONDS_BUCKETS,
+                  **labels) -> Histogram:
+        return self._get(Histogram, name, labels, bounds=bounds)
+
+    # -- views ------------------------------------------------------------
+    def items(self):
+        for (name, labels), m in sorted(self._metrics.items()):
+            yield flat_name(name, labels), m
+
+    def value(self, name: str, **labels) -> float:
+        """Current scalar value of a counter/gauge (stats() convenience)."""
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        return self._metrics[key].value
+
+    def snapshot(self) -> Dict:
+        """JSON-able view: {"counters": {...}, "gauges": {...},
+        "histograms": {name: Histogram.to_dict()}}."""
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for fname, m in self.items():
+            if isinstance(m, Counter):
+                out["counters"][fname] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][fname] = m.value
+            else:
+                out["histograms"][fname] = m.to_dict()
+        return out
+
+    @staticmethod
+    def delta(new: Dict, old: Dict) -> Dict:
+        """Counter deltas between two snapshots (rate windows)."""
+        oc = old.get("counters", {})
+        return {k: v - oc.get(k, 0.0)
+                for k, v in new.get("counters", {}).items()}

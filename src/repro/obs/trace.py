@@ -1,0 +1,162 @@
+"""Request lifecycle tracing: enqueue → admit → prefill → first-token →
+per-chunk-decode → retire, one timeline per request in both engines.
+
+Every timestamp is seconds on ONE monotonic clock (``time.perf_counter``;
+the owning ``Obs`` rebases it to its creation).  Span boundaries are taken
+only after the engine has fenced the device (``jax.block_until_ready`` /
+a host transfer of the dispatch outputs), so spans measure device work,
+not dispatch latency — the engines enforce this, the trace just records.
+
+Derived latencies (the serving headline numbers, computed HERE so the
+benchmarks and production telemetry share one definition and can never
+drift):
+
+* ``queue_s``   = admit − enqueue          (admission wait)
+* ``ttft_s``    = first_token − enqueue    (time to first token)
+* ``prefill_s`` = first_token − admit      (engine-side prefill span)
+* ``decode_s``  = retire − first_token     (decode span)
+* ``tpot_s``    = decode_s / (decode_len − 1)   (per-token decode latency;
+  None for single-token requests)
+* ``latency_s`` = retire − enqueue         (end-to-end)
+
+Ordering is an invariant, not a convention: ``finish`` raises if the
+timeline is not ``enqueue ≤ admit ≤ first_token ≤ retire`` (hypothesis-
+swept in tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    id: int                       # engine Request.id
+    order: int                    # submission order (unique per engine)
+    prompt_len: int
+    enqueue_s: float
+    admit_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    retire_s: Optional[float] = None
+    decode_len: int = 0
+    # (t_end_s, new_tokens) per decode dispatch that advanced this request
+    chunks: List = dataclasses.field(default_factory=list)
+
+    # -- lifecycle marks --------------------------------------------------
+    def mark_admit(self, t: float) -> None:
+        self.admit_s = float(t)
+
+    def mark_first_token(self, t: float) -> None:
+        self.first_token_s = float(t)
+        self.decode_len = 1
+
+    def mark_chunk(self, t: float, new_tokens: int) -> None:
+        self.chunks.append((float(t), int(new_tokens)))
+        self.decode_len += int(new_tokens)
+
+    def mark_retire(self, t: float) -> None:
+        self.retire_s = float(t)
+
+    # -- derived spans ----------------------------------------------------
+    @property
+    def queue_s(self) -> float:
+        return self.admit_s - self.enqueue_s
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.enqueue_s
+
+    @property
+    def prefill_s(self) -> float:
+        return self.first_token_s - self.admit_s
+
+    @property
+    def decode_s(self) -> float:
+        return self.retire_s - self.first_token_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        if self.decode_len <= 1:
+            return None
+        return self.decode_s / (self.decode_len - 1)
+
+    @property
+    def latency_s(self) -> float:
+        return self.retire_s - self.enqueue_s
+
+    def validate(self) -> None:
+        """Span-ordering invariant; raises ValueError on a broken timeline."""
+        marks = [("enqueue", self.enqueue_s), ("admit", self.admit_s),
+                 ("first_token", self.first_token_s),
+                 ("retire", self.retire_s)]
+        missing = [n for n, t in marks if t is None]
+        if missing:
+            raise ValueError(f"trace {self.order}: missing marks {missing}")
+        for (an, at), (bn, bt) in zip(marks, marks[1:]):
+            if bt < at:
+                raise ValueError(f"trace {self.order}: {bn} ({bt}) before "
+                                 f"{an} ({at})")
+
+    def to_dict(self) -> Dict:
+        """The emitter's JSONL trace payload (docs/observability.md)."""
+        return {
+            "id": self.id,
+            "order": self.order,
+            "prompt_len": self.prompt_len,
+            "decode_len": self.decode_len,
+            "enqueue_s": self.enqueue_s,
+            "admit_s": self.admit_s,
+            "first_token_s": self.first_token_s,
+            "retire_s": self.retire_s,
+            "queue_s": self.queue_s,
+            "ttft_s": self.ttft_s,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "tpot_s": self.tpot_s,
+            "latency_s": self.latency_s,
+            "chunks": [list(c) for c in self.chunks],
+        }
+
+
+class TraceStore:
+    """Active traces by submission order + a bounded completed buffer.
+
+    ``finish`` validates the timeline and moves the trace to ``completed``
+    (a deque capped at ``max_completed`` so an emitterless engine cannot
+    grow without bound); the emitter drains ``pending`` — traces completed
+    since the last flush — without disturbing ``completed`` readers
+    (benches iterate ``completed`` post-hoc).
+    """
+
+    def __init__(self, max_completed: int = 100_000):
+        self.active: Dict[int, RequestTrace] = {}
+        self.completed: Deque[RequestTrace] = deque(maxlen=max_completed)
+        self._pending: Deque[RequestTrace] = deque(maxlen=max_completed)
+
+    def start(self, id: int, order: int, prompt_len: int,
+              enqueue_s: float) -> RequestTrace:
+        tr = RequestTrace(id=id, order=order, prompt_len=prompt_len,
+                          enqueue_s=float(enqueue_s))
+        self.active[order] = tr
+        return tr
+
+    def get(self, order: int) -> Optional[RequestTrace]:
+        return self.active.get(order)
+
+    def finish(self, trace: RequestTrace) -> RequestTrace:
+        trace.validate()
+        self.active.pop(trace.order, None)
+        self.completed.append(trace)
+        self._pending.append(trace)
+        return trace
+
+    def drain_pending(self) -> List[RequestTrace]:
+        out = list(self._pending)
+        self._pending.clear()
+        return out
+
+    def clear(self) -> None:
+        """Drop completed traces (benches call between warm/timed passes)."""
+        self.completed.clear()
+        self._pending.clear()

@@ -261,6 +261,12 @@ def page_scatter(pool_q: jax.Array, scales: jax.Array, pid: jax.Array,
     O(token), not O(page).  Idle slots carry pid == 0 (the trash page);
     duplicate trash writes are unordered but trash content and trash
     scale are never read unmasked.
+
+    Because scales only GROW, the serving telemetry can count grow events
+    without threading a counter through the jit'd loop: the continuous
+    engine diffs host shadows of the scale leaves around decode
+    dispatches into the ``quant.scale_growths`` counter
+    (docs/observability.md).
     """
     page = pool_q.shape[1]
     s_old = scales[pid]                                        # (B, H)

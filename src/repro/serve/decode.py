@@ -168,6 +168,11 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
 
     Returns ``decode_loop(params, cur, pool, table, pos, rem)`` ->
     ``(buf (B, chunk) int32, cur, pool, pos, rem, done)``.
+
+    Telemetry contract (repro.obs): dispatch is async, so the engine
+    fences the loop outputs (``jax.block_until_ready``) before stamping a
+    span boundary — the ``engine.decode_chunk_s`` histogram and the
+    per-chunk trace marks measure this device program, not its dispatch.
     """
     model = build_model(cfg)
     base_key = jax.random.PRNGKey(seed)

@@ -42,11 +42,35 @@ from ..dist import sharding as dist_sharding
 from ..launch import mesh as mesh_lib
 from ..models import transformer as tfm
 from ..models.registry import build_model
+from ..obs import BYTES_BUCKETS, RATIO_BUCKETS, Obs
 from ..quant.codec import QuantPolicy
 from . import decode as dec
 from . import kvcache as kvc
 from .params import precompute_serving_params
 from .scheduler import Scheduler
+
+# Counters both engines keep in their obs registry under the SAME names and
+# units — the unified stats() schema (docs/observability.md).  ``*_s``
+# counters accumulate seconds; the rest are token/request counts.
+ENGINE_COUNTERS = ("requests", "tokens", "prompt_tokens",
+                   "padded_prompt_tokens", "prefill_s", "decode_s",
+                   "dispatches")
+
+
+def _engine_stats_view(obs: Obs, engine: str) -> Dict:
+    """The shared half of Engine.stats()/ContinuousEngine.stats(): a view
+    over the registry counters plus the derived fields both engines define
+    identically (tokens_per_s over end-to-end serve time, pad waste)."""
+    v = obs.registry.value
+    st = {"engine": engine}
+    for name in ENGINE_COUNTERS:
+        val = v(name)
+        st[name] = val if name.endswith("_s") else int(val)
+    st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
+                              - st["prompt_tokens"])
+    st["tokens_per_s"] = st["tokens"] / max(
+        st["prefill_s"] + st["decode_s"], 1e-9)
+    return st
 
 
 @dataclasses.dataclass
@@ -62,7 +86,8 @@ class Engine:
                  precompute: bool = True, decode_mode: str = "scan",
                  eos_id: Optional[int] = None, temperature: float = 1.0,
                  seed: int = 0, bucket_prompts: bool = True,
-                 quant: Optional[QuantPolicy] = None):
+                 quant: Optional[QuantPolicy] = None,
+                 obs: Optional[Obs] = None):
         assert decode_mode in ("scan", "per_token"), decode_mode
         self.cfg = cfg
         self.quant = quant or QuantPolicy()
@@ -95,9 +120,14 @@ class Engine:
                                  seed=seed),
             donate_argnums=(2,))
         self._loops: Dict[int, object] = {}
-        self._stats = {"requests": 0, "batches": 0, "tokens": 0,
-                       "prompt_tokens": 0, "padded_prompt_tokens": 0,
-                       "prefill_s": 0.0, "decode_s": 0.0}
+        # telemetry (repro.obs): the registry IS the stats() backing store;
+        # counters are held directly so the hot path is one float add
+        self.obs = obs if obs is not None else Obs()
+        reg = self.obs.registry
+        self._ctr = {n: reg.counter(n) for n in ENGINE_COUNTERS}
+        self._h_prefill = reg.histogram("engine.prefill_dispatch_s")
+        self._h_decode = reg.histogram("engine.decode_dispatch_s")
+        self._order = 0                     # trace submission order
 
     def _loop_fn(self, steps: int):
         """jit'd decode loop for a step budget (cached per budget)."""
@@ -139,19 +169,32 @@ class Engine:
                                           reqs[i].max_new_tokens))
         else:
             order = list(range(len(reqs)))
+        # every request enqueues NOW; later batches' traces carry the queue
+        # wait their bucket imposed (admit - enqueue)
+        t_enq = self.obs.now()
+        traces = [None] * len(reqs)
+        if self.obs.enabled:
+            for i, r in enumerate(reqs):
+                traces[i] = self.obs.trace_start(r.id, self._order,
+                                                 len(r.prompt), t_enq)
+                self._order += 1
         out: List[Optional[Dict]] = [None] * len(reqs)
         for i in range(0, len(order), self.max_batch):
             idxs = order[i:i + self.max_batch]
-            for j, r in zip(idxs, self._generate_batch([reqs[j]
-                                                        for j in idxs])):
+            batch_out = self._generate_batch([reqs[j] for j in idxs],
+                                             [traces[j] for j in idxs])
+            for j, r in zip(idxs, batch_out):
                 out[j] = r
         return out
 
-    def _generate_batch(self, reqs: Sequence[Request]) -> List[Dict]:
+    def _generate_batch(self, reqs: Sequence[Request],
+                        traces: Optional[Sequence] = None) -> List[Dict]:
         with dist_ctx.activation_policy(self.mesh):
-            return self._generate_batch_inner(reqs)
+            return self._generate_batch_inner(
+                reqs, traces if traces is not None else [None] * len(reqs))
 
-    def _generate_batch_inner(self, reqs: Sequence[Request]) -> List[Dict]:
+    def _generate_batch_inner(self, reqs: Sequence[Request],
+                              traces: Sequence) -> List[Dict]:
         t0 = time.perf_counter()
         batch = self._make_batch(reqs)
         B, S = batch["tokens"].shape
@@ -173,6 +216,8 @@ class Engine:
         cache = self.model.init_cache(B, S + steps - 1, dtype=jnp.float32)
         logits, cache = self._prefill(self.params, batch, cache)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        # fence BEFORE every span boundary: the t1/t2 marks (and the trace
+        # spans derived from them) measure device work, not dispatch
         jax.block_until_ready(nxt)
         t1 = time.perf_counter()
 
@@ -183,6 +228,7 @@ class Engine:
                                    for r in reqs], jnp.int32)
             gen, _ = self._loop_fn(steps)(self.params, nxt, cache,
                                           jnp.int32(S), lengths)
+        jax.block_until_ready(gen)
         gen = np.asarray(gen)                          # (B, steps)
         t2 = time.perf_counter()
         prefill_s, decode_s = t1 - t0, t2 - t1
@@ -201,14 +247,28 @@ class Engine:
                 "decode_s": decode_s,
                 "latency_s": prefill_s + decode_s,
             })
-        st = self._stats
-        st["requests"] += len(reqs)
-        st["batches"] += 1
-        st["tokens"] += sum(r["decode_len"] for r in out)
-        st["prompt_tokens"] += sum(len(r.prompt) for r in reqs)
-        st["padded_prompt_tokens"] += B * S
-        st["prefill_s"] += prefill_s
-        st["decode_s"] += decode_s
+        c = self._ctr
+        c["requests"].inc(len(reqs))
+        c["dispatches"].inc()
+        c["tokens"].inc(sum(r["decode_len"] for r in out))
+        c["prompt_tokens"].inc(sum(len(r.prompt) for r in reqs))
+        c["padded_prompt_tokens"].inc(B * S)
+        c["prefill_s"].inc(prefill_s)
+        c["decode_s"].inc(decode_s)
+        if self.obs.enabled:
+            self._h_prefill.observe(prefill_s)
+            self._h_decode.observe(decode_s)
+            for tr, res in zip(traces, out):
+                if tr is None:
+                    continue
+                tr.mark_admit(self.obs.rebase(t0))
+                tr.mark_first_token(self.obs.rebase(t1))
+                if res["decode_len"] > 1:
+                    tr.mark_chunk(self.obs.rebase(t2),
+                                  res["decode_len"] - 1)
+                tr.mark_retire(self.obs.rebase(t2))
+                self.obs.trace_finish(tr)
+        self.obs.tick()
         return out
 
     def _decode_per_token(self, nxt, cache, S: int, steps: int) -> np.ndarray:
@@ -221,14 +281,12 @@ class Engine:
         return np.asarray(jnp.stack(toks, 1))          # (B, steps)
 
     def stats(self) -> Dict:
-        """Cumulative engine telemetry (tokens, prefill/decode split, and
-        the prompt-padding waste the bucketing satellite targets)."""
-        st = dict(self._stats)
-        st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
-                                  - st["prompt_tokens"])
-        # same denominator as ContinuousEngine.stats(): end-to-end serve time
-        st["tokens_per_s"] = st["tokens"] / max(
-            st["prefill_s"] + st["decode_s"], 1e-9)
+        """Cumulative engine telemetry as a view over the obs registry —
+        one schema shared with ContinuousEngine.stats()
+        (docs/observability.md).  ``batches`` is the legacy alias for the
+        unified ``dispatches`` counter (one decode dispatch per batch)."""
+        st = _engine_stats_view(self.obs, "batch")
+        st["batches"] = st["dispatches"]     # legacy alias (one release)
         return st
 
 
@@ -257,7 +315,8 @@ class ContinuousEngine:
                  temperature: float = 1.0, seed: int = 0,
                  eos_id: Optional[int] = None, mesh=None,
                  precompute: bool = True, paged_attn: str = "stream",
-                 quant: Optional[QuantPolicy] = None):
+                 quant: Optional[QuantPolicy] = None,
+                 obs: Optional[Obs] = None):
         if paged_attn not in ("stream", "gather"):
             raise ValueError(f"paged_attn {paged_attn!r}: "
                              f"expected 'stream' or 'gather'")
@@ -309,11 +368,16 @@ class ContinuousEngine:
         # trivial on the 1-device host mesh, load-bearing on real meshes
         self.pool = jax.device_put(self.pool, dist_sharding.to_shardings(
             dist_sharding.pool_specs(self.pool, self.mesh), self.mesh))
+        # telemetry (repro.obs): the registry backs stats(); the allocator
+        # and scheduler write their own gauges/counters into it
+        self.obs = obs if obs is not None else Obs()
+        reg = self.obs.registry
         self.block_table = kvc.BlockTable(
-            kvc.PageAllocator(num_pages), max_slots, page_size,
-            self.max_pages_per_slot)
+            kvc.PageAllocator(num_pages, registry=reg), max_slots,
+            page_size, self.max_pages_per_slot)
         self.scheduler = Scheduler(self.block_table, max_seq=max_seq,
-                                   max_tokens_in_flight=max_tokens_in_flight)
+                                   max_tokens_in_flight=max_tokens_in_flight,
+                                   registry=reg)
         # ONE fixed-size decode program: chunk size never varies, so the
         # loop compiles exactly once — adaptive sizing would dodge some
         # frozen-slot steps but risks multi-second mid-serving compiles the
@@ -327,9 +391,24 @@ class ContinuousEngine:
         self._pos = np.zeros(max_slots, np.int32)
         self._rem = np.zeros(max_slots, np.int32)
         self._dev_table = None              # device copy; None = stale
-        self._stats = {"requests": 0, "tokens": 0, "prompt_tokens": 0,
-                       "padded_prompt_tokens": 0, "prefill_s": 0.0,
-                       "decode_s": 0.0, "decode_dispatches": 0}
+        self._ctr = {n: reg.counter(n) for n in ENGINE_COUNTERS}
+        self._h_prefill = reg.histogram("engine.prefill_dispatch_s")
+        self._h_chunk = reg.histogram("engine.decode_chunk_s")
+        self._h_occup = reg.histogram("sched.slot_occupancy",
+                                      bounds=RATIO_BUCKETS)
+        self._h_attn_bytes = reg.histogram("attn.bytes_per_token",
+                                           bounds=BYTES_BUCKETS)
+        self._c_growths = reg.counter("quant.scale_growths")
+        # per-position attention byte term for the live bytes/token series
+        self._attn_per_pos = kvc.attention_bytes_per_position(
+            self.pool)["per_pos"]
+        # host shadow of the int8 pool's scales: decode-dispatch diffs
+        # count page-scatter requantize-on-grow events (scales only GROW)
+        self._scales_host = (kvc.pool_scales(self.pool)
+                             if self.obs.enabled and self.quant.kv_quantized
+                             else None)
+        self._traces: Dict[int, object] = {}     # submission order -> trace
+        self._t0_perf = None                # generate()'s t_start (perf)
 
     # -- jit caches -------------------------------------------------------
     def _prefill_fn(self, n_pages: int):
@@ -350,9 +429,16 @@ class ContinuousEngine:
                     f"prompt length {len(r.prompt)} exceeds max_seq "
                     f"{self.max_seq}")
         t_start = time.perf_counter()
+        self._t0_perf = t_start
         arr = ([0.0] * len(reqs) if arrival_times is None
                else [float(a) for a in arrival_times])
         orders = [self.scheduler.submit(r, a) for r, a in zip(reqs, arr)]
+        if self.obs.enabled:
+            # a request ENQUEUES at its (possibly simulated) arrival — the
+            # trace timeline starts there so queue_s covers admission wait
+            for r, o, a in zip(reqs, orders, arr):
+                self._traces[o] = self.obs.trace_start(
+                    r.id, o, len(r.prompt), self.obs.rebase(t_start) + a)
         results: Dict[int, Dict] = {}
         gate = arrival_times is not None
         with dist_ctx.activation_policy(self.mesh):
@@ -376,6 +462,7 @@ class ContinuousEngine:
                     raise RuntimeError(
                         "scheduler stall: queued request cannot be admitted "
                         "into an idle engine (budget/pool too small)")
+                self.obs.tick()             # emitter rides the dispatch cadence
         return [results[o] for o in orders]
 
     def _prefill_slot(self, slot, results: Dict, t_start: float) -> None:
@@ -395,6 +482,9 @@ class ContinuousEngine:
                             jnp.int32)
         nxt, self.pool = self._prefill_fn(n_pages)(
             self.params, batch, self.pool, pages, jnp.int32(S))
+        # fence the whole dispatch (token AND page scatter) so the prefill
+        # span — and the trace's first-token mark — measure device work
+        jax.block_until_ready((nxt, self.pool))
         first = int(nxt)
         slot.tokens.append(first)
         slot.pos = S                       # position of the token in flight
@@ -402,11 +492,22 @@ class ContinuousEngine:
         self._cur[slot.index] = first
         self._pos[slot.index] = S
         self._rem[slot.index] = slot.budget
-        dt = time.perf_counter() - t0
-        self._stats["prefill_s"] += dt
-        self._stats["prompt_tokens"] += S
-        self._stats["padded_prompt_tokens"] += spad
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        self._ctr["prefill_s"].inc(dt)
+        self._ctr["prompt_tokens"].inc(S)
+        self._ctr["padded_prompt_tokens"].inc(spad)
         slot.prefill_s = dt
+        if self.obs.enabled:
+            self._h_prefill.observe(dt)
+            tr = self._traces.get(slot.order)
+            if tr is not None:
+                tr.mark_admit(self.obs.rebase(t_start) + slot.admit_s)
+                tr.mark_first_token(self.obs.rebase(t1))
+            if self._scales_host is not None:
+                # prefill packs fresh pages (new scales, not grow events):
+                # refresh the shadow so the next decode diff is clean
+                self._scales_host = kvc.pool_scales(self.pool)
         if slot.budget <= 0 or (self.eos_id is not None
                                 and first == self.eos_id):
             self._rem[slot.index] = 0
@@ -414,6 +515,7 @@ class ContinuousEngine:
 
     def _dispatch_decode(self, results: Dict, t_start: float) -> None:
         t0 = time.perf_counter()
+        running = list(self.scheduler.running)
         rem_before = self._rem.copy()
         if self._dev_table is None:         # tables change only on
             self._dev_table = self.block_table.device_table()   # admit/retire
@@ -421,21 +523,42 @@ class ContinuousEngine:
             self.params, jnp.asarray(self._cur), self.pool,
             self._dev_table, jnp.asarray(self._pos),
             jnp.asarray(self._rem))
+        # fence before the span boundary: the decode_chunk wall time (and
+        # the per-chunk trace marks) measure the device program
+        jax.block_until_ready(buf)
+        t1 = time.perf_counter()
         buf = np.asarray(buf)
         self._cur = np.array(cur)
         self._pos = np.array(pos)
         self._rem = np.array(rem)
         done = np.asarray(done)
-        dt = time.perf_counter() - t0
-        self._stats["decode_s"] += dt
-        self._stats["decode_dispatches"] += 1
-        for slot in list(self.scheduler.running):
+        dt = t1 - t0
+        self._ctr["decode_s"].inc(dt)
+        self._ctr["dispatches"].inc()
+        if self.obs.enabled:
+            self._h_chunk.observe(dt)
+            self._h_occup.observe(len(running) / max(self.max_slots, 1))
+            if self._scales_host is not None:
+                scales = kvc.pool_scales(self.pool)
+                self._c_growths.inc(
+                    int((scales > self._scales_host).sum()))
+                self._scales_host = scales
+        t_chunk = self.obs.rebase(t1)
+        for slot in running:
             b = slot.index
             n = int(rem_before[b] - self._rem[b])
             if n:
                 slot.tokens.extend(buf[b, :n].tolist())
                 slot.pos = int(self._pos[b])
-                self._stats["tokens"] += n
+                self._ctr["tokens"].inc(n)
+                if self.obs.enabled:
+                    # live-length bytes/token: what attention actually
+                    # streamed for this slot (worst case is in stats())
+                    self._h_attn_bytes.observe(
+                        self._attn_per_pos * int(self._pos[b]))
+                    tr = self._traces.get(slot.order)
+                    if tr is not None:
+                        tr.mark_chunk(t_chunk, n)
             if done[b]:
                 self._finish(slot, results, t_start)
 
@@ -443,32 +566,54 @@ class ContinuousEngine:
         now = time.perf_counter() - t_start
         prefill_s = getattr(slot, "prefill_s", 0.0)
         arrival, admit = slot.arrival_s, slot.admit_s
+        order = slot.order
         res = self.scheduler.retire(slot)   # releases the slot's pages
         self._dev_table = None
-        decode_s = max(now - admit - prefill_s, 0.0)
-        res.update({
-            "tokens_per_s": res["decode_len"] / max(decode_s, 1e-9),
-            "prefill_s": prefill_s,
-            "decode_s": decode_s,
-            "queue_s": max(admit - arrival, 0.0),
-            "latency_s": max(now - arrival, 0.0),
-        })
-        self._stats["requests"] += 1
-        self._stats["tokens"] += 1          # the prefill-emitted first token
+        tr = self._traces.pop(order, None)
+        if tr is not None:
+            # one timeline: the result's latency fields come FROM the trace,
+            # so bench percentiles over results and over traces are the same
+            # numbers by construction
+            tr.mark_retire(self.obs.rebase(t_start) + now)
+            self.obs.trace_finish(tr)
+            decode_s = tr.decode_s
+            res.update({
+                "tokens_per_s": res["decode_len"] / max(decode_s, 1e-9),
+                "prefill_s": tr.prefill_s,
+                "decode_s": decode_s,
+                "queue_s": tr.queue_s,
+                "latency_s": tr.latency_s,
+            })
+        else:
+            decode_s = max(now - admit - prefill_s, 0.0)
+            res.update({
+                "tokens_per_s": res["decode_len"] / max(decode_s, 1e-9),
+                "prefill_s": prefill_s,
+                "decode_s": decode_s,
+                "queue_s": max(admit - arrival, 0.0),
+                "latency_s": max(now - arrival, 0.0),
+            })
+        self._ctr["requests"].inc()
+        self._ctr["tokens"].inc()           # the prefill-emitted first token
         results[res.pop("order")] = res
 
     # -- telemetry --------------------------------------------------------
     def stats(self) -> Dict:
-        """Engine + scheduler telemetry: queue depth, in-flight tokens,
-        page-pool utilization, prefill/decode split, pool footprint, and
-        the decode-attention memory estimates (worst case: every slot at
-        full length) the serving benchmarks record."""
-        st = dict(self._stats)
+        """Engine + scheduler telemetry as a view over the obs registry —
+        one schema shared with Engine.stats() (docs/observability.md):
+        queue depth, in-flight tokens, page-pool utilization,
+        prefill/decode split, pool footprint, and the decode-attention
+        memory estimates (worst case: every slot at full length) the
+        serving benchmarks record.  ``decode_dispatches`` is the legacy
+        alias for the unified ``dispatches`` counter."""
+        st = _engine_stats_view(self.obs, "continuous")
+        st["decode_dispatches"] = st["dispatches"]  # legacy alias
         st.update(self.scheduler.stats())
-        st["prompt_pad_waste"] = (st["padded_prompt_tokens"]
-                                  - st["prompt_tokens"])
-        st["tokens_per_s"] = st["tokens"] / max(
-            st["prefill_s"] + st["decode_s"], 1e-9)
+        v = self.obs.registry.value
+        st["free_pages"] = int(v("pool.free_pages"))
+        st["pages_alloc"] = int(v("pool.pages_alloc"))
+        st["pages_freed"] = int(v("pool.pages_freed"))
+        st["scale_growths"] = int(v("quant.scale_growths"))
         st["pool_bytes"] = kvc.pool_bytes(self.pool)
         st["kv_pool_bytes"] = st["pool_bytes"]     # quant-satellite alias
         st["quant_policy"] = self.quant.describe()

@@ -49,14 +49,25 @@ class PageAllocator:
 
     ``alloc`` returns None instead of raising when the pool is exhausted —
     the scheduler treats that as "request stays queued".
+
+    With a metrics ``registry`` (repro.obs) the allocator keeps the
+    ``pool.free_pages`` gauge and the ``pool.pages_alloc`` /
+    ``pool.pages_freed`` churn counters current on every alloc/free — the
+    over-time view of what ``in_use`` reports point-in-time.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, registry=None):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is the trash)")
         self.num_pages = int(num_pages)
         self._free = list(range(self.num_pages - 1, 0, -1))
         self._held: set = set()
+        self._free_gauge = self._alloc_ctr = self._freed_ctr = None
+        if registry is not None:
+            self._free_gauge = registry.gauge("pool.free_pages")
+            self._free_gauge.set(len(self._free))
+            self._alloc_ctr = registry.counter("pool.pages_alloc")
+            self._freed_ctr = registry.counter("pool.pages_freed")
 
     @property
     def available(self) -> int:
@@ -73,6 +84,9 @@ class PageAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._held.update(pages)
+        if self._alloc_ctr is not None:
+            self._alloc_ctr.inc(n)
+            self._free_gauge.set(len(self._free))
         return pages
 
     def free(self, pages: Sequence[int]) -> None:
@@ -81,6 +95,9 @@ class PageAllocator:
                 raise ValueError(f"double free / foreign page {p}")
             self._held.discard(p)
             self._free.append(p)
+        if self._freed_ctr is not None:
+            self._freed_ctr.inc(len(pages))
+            self._free_gauge.set(len(self._free))
 
 
 class BlockTable:
@@ -274,6 +291,65 @@ def page_bytes(cfg: ArchConfig, page_size: int,
         lambda: build_pool(cfg, 1, page_size, policy)))
 
 
+def attention_bytes_per_position(pool) -> Dict[str, int]:
+    """Per-position attention byte terms of a pool tree.
+
+    ``per_pos`` — HBM bytes one live cache position costs a decode-step
+    attention read (K+V over every layer/group, in the pool's storage
+    dtype); ``widest`` — K+V bytes of one position in the widest single
+    layer (the unit of a transient gathered/streamed buffer).  Shared by
+    the worst-case estimate below and the engine's per-dispatch
+    ``attn.bytes_per_token`` histogram (which multiplies ``per_pos`` by
+    the LIVE slot lengths instead of the worst case).
+    """
+    per_pos, widest = 0, 0
+
+    def walk(node):
+        nonlocal per_pos, widest
+        if _is_kv_leaf(node):
+            n = node["k"].shape[0]
+            hkv, d = node["k"].shape[-2:]
+            item = np.dtype(node["k"].dtype).itemsize
+            per_pos += 2 * n * hkv * d * item          # k + v, all groups
+            widest = max(widest, 2 * hkv * d * item)
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pool)
+    return {"per_pos": per_pos, "widest": widest}
+
+
+def pool_scales(pool) -> Optional[np.ndarray]:
+    """Flat host copy of every quantization-scale leaf (``k_scale`` /
+    ``v_scale``), or None for an unquantized pool.  The engine diffs two
+    of these around a decode dispatch to count ``quant.scale_growths``
+    (page-scatter requantize-on-grow events — codec.page_scatter scales
+    only ever grow in place, so ``new > old`` identifies them); the
+    transfer is a few KB and runs only when obs tracing is enabled."""
+    leaves = []
+
+    def walk(node):
+        if _is_kv_leaf(node):
+            for key in ("k_scale", "v_scale"):
+                if key in node:
+                    leaves.append(np.asarray(node[key]).ravel())
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pool)
+    if not leaves:
+        return None
+    return np.concatenate(leaves)
+
+
 def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,
                          page_size: int, impl: str = "stream") -> Dict:
     """Analytic decode-attention memory estimates over a pool tree.
@@ -297,24 +373,8 @@ def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,
     the K/V bytes and excluded).
     """
     from ..kernels.paged_attention import BLOCK_PAGES
-    per_pos, widest = 0, 0
-
-    def walk(node):
-        nonlocal per_pos, widest
-        if _is_kv_leaf(node):
-            n = node["k"].shape[0]
-            hkv, d = node["k"].shape[-2:]
-            item = np.dtype(node["k"].dtype).itemsize
-            per_pos += 2 * n * hkv * d * item          # k + v, all groups
-            widest = max(widest, 2 * hkv * d * item)
-        elif isinstance(node, dict):
-            for v in node.values():
-                walk(v)
-        elif isinstance(node, (list, tuple)):
-            for v in node:
-                walk(v)
-
-    walk(pool)
+    terms = attention_bytes_per_position(pool)
+    per_pos, widest = terms["per_pos"], terms["widest"]
     max_len = max_pages_per_slot * page_size
     if impl == "gather":
         return {"attention_bytes_per_token": 3 * per_pos * max_len,

@@ -25,6 +25,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from ..obs.metrics import Registry
 from .kvcache import BlockTable, pages_for
 
 
@@ -46,28 +47,66 @@ class SlotState:
 
 
 class Scheduler:
-    """FIFO token-budget admission + slot lifecycle over a BlockTable."""
+    """FIFO token-budget admission + slot lifecycle over a BlockTable.
+
+    Lifecycle counters live in a ``repro.obs`` Registry (one is created
+    internally when none is passed): ``sched.submitted`` / ``.admitted`` /
+    ``.retired`` counters, ``sched.deferred{reason=...}`` counters for
+    admission attempts that parked at the token budget or an exhausted
+    page pool, and ``sched.queue_depth`` / ``sched.tokens_in_flight``
+    gauges (peaks via the gauge high-water marks).  ``stats()`` is a view
+    over that registry plus the allocator's page accounting.
+    """
 
     def __init__(self, table: BlockTable, *, max_seq: int,
-                 max_tokens_in_flight: int):
+                 max_tokens_in_flight: int,
+                 registry: Optional[Registry] = None):
         self.table = table
         self.max_seq = int(max_seq)
         self.max_tokens_in_flight = int(max_tokens_in_flight)
         self.slots = [SlotState(i) for i in range(table.table.shape[0])]
         self.queue: Deque[Tuple[int, object, float]] = deque()
         self.tokens_in_flight = 0
-        self.submitted = 0
-        self.admitted = 0
-        self.retired = 0
-        self.peak_tokens_in_flight = 0
-        self.peak_pages_in_use = 0
+        self.registry = registry if registry is not None else Registry()
+        reg = self.registry
+        self._c_submitted = reg.counter("sched.submitted")
+        self._c_admitted = reg.counter("sched.admitted")
+        self._c_retired = reg.counter("sched.retired")
+        self._c_defer_budget = reg.counter("sched.deferred",
+                                           reason="token_budget")
+        self._c_defer_pages = reg.counter("sched.deferred", reason="pages")
+        self._g_queue = reg.gauge("sched.queue_depth")
+        self._g_inflight = reg.gauge("sched.tokens_in_flight")
+        self._g_pages = reg.gauge("sched.pages_in_use")
+
+    # registry-backed lifecycle counts (legacy attribute names preserved)
+    @property
+    def submitted(self) -> int:
+        return int(self._c_submitted.value)
+
+    @property
+    def admitted(self) -> int:
+        return int(self._c_admitted.value)
+
+    @property
+    def retired(self) -> int:
+        return int(self._c_retired.value)
+
+    @property
+    def peak_tokens_in_flight(self) -> int:
+        return int(self._g_inflight.max_seen)
+
+    @property
+    def peak_pages_in_use(self) -> int:
+        return int(self._g_pages.max_seen)
 
     # -- queue ------------------------------------------------------------
     def submit(self, request, arrival_s: float = 0.0) -> int:
         """Queue a request; returns its submission order index."""
         order = self.submitted
         self.queue.append((order, request, arrival_s))
-        self.submitted += 1
+        self._c_submitted.inc()
+        self._g_queue.set(len(self.queue))
         return order
 
     @property
@@ -117,9 +156,11 @@ class Scheduler:
                 raise ValueError(f"prompt length {len(req.prompt)} exceeds "
                                  f"max_seq {self.max_seq}")
             if self.tokens_in_flight + tokens > self.max_tokens_in_flight:
+                self._c_defer_budget.inc()
                 break
             slot = free[0]
             if not self.table.reserve(slot.index, positions):
+                self._c_defer_pages.inc()
                 break                              # pool exhausted: wait
             free.popleft()
             self.queue.popleft()
@@ -131,12 +172,11 @@ class Scheduler:
             slot.arrival_s = arrival
             slot.admit_s = now_s
             self.tokens_in_flight += tokens
-            self.admitted += 1
+            self._c_admitted.inc()
             out.append(slot)
-        self.peak_tokens_in_flight = max(self.peak_tokens_in_flight,
-                                         self.tokens_in_flight)
-        self.peak_pages_in_use = max(self.peak_pages_in_use,
-                                     self.table.allocator.in_use)
+        self._g_queue.set(len(self.queue))
+        self._g_inflight.set(self.tokens_in_flight)
+        self._g_pages.set(self.table.allocator.in_use)
         return out
 
     # -- retirement -------------------------------------------------------
@@ -157,7 +197,9 @@ class Scheduler:
         slot.tokens = []
         slot.pos = 0
         slot.budget = 0
-        self.retired += 1
+        self._c_retired.inc()
+        self._g_inflight.set(self.tokens_in_flight)
+        self._g_pages.set(self.table.allocator.in_use)
         return result
 
     # -- telemetry --------------------------------------------------------
@@ -173,4 +215,6 @@ class Scheduler:
             "submitted": self.submitted,
             "admitted": self.admitted,
             "retired": self.retired,
+            "deferred_token_budget": int(self._c_defer_budget.value),
+            "deferred_pages": int(self._c_defer_pages.value),
         }

@@ -63,8 +63,13 @@ class Trainer:
 
     # -- fault-tolerance plumbing ------------------------------------------
     def _heartbeat(self, step: int):
+        # "time" (wall clock) is the absolute for-humans field; age deltas
+        # use "mono" — perf_counter is CLOCK_MONOTONIC on Linux, so it is
+        # comparable across processes on one host (the heartbeat-file
+        # scope) and immune to NTP steps that would skew a wall-clock
+        # difference into a false straggler alarm
         hb = {"step": step, "time": time.time(),
-              "host": jax.process_index()}
+              "mono": time.perf_counter(), "host": jax.process_index()}
         with open(os.path.join(self.workdir, "heartbeat.json"), "w") as f:
             json.dump(hb, f)
 
@@ -75,7 +80,10 @@ class Trainer:
         if not os.path.exists(path):
             return float("inf")
         with open(path) as f:
-            return time.time() - json.load(f)["time"]
+            hb = json.load(f)
+        if "mono" in hb:                    # same-boot monotonic delta
+            return time.perf_counter() - hb["mono"]
+        return time.time() - hb["time"]     # legacy wall-clock heartbeat
 
     def _install_preemption_handler(self):
         def handler(signum, frame):

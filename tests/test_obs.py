@@ -1,0 +1,359 @@
+"""repro.obs: metric invariants (hypothesis sweeps where available),
+trace span ordering, emitter schema round-trip, and engine-level
+trace/stats integration for both serving engines."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+from repro.obs import (Obs, RequestTrace, TraceStore, validate_jsonl,
+                       validate_line)
+from repro.obs.emit import Emitter
+from repro.obs.metrics import (SECONDS_BUCKETS, Counter, Gauge, Histogram,
+                               Registry, flat_name)
+from repro.serve.engine import ContinuousEngine, Engine, Request
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Counter / Gauge
+# ---------------------------------------------------------------------------
+def _counter_monotone(incs):
+    c = Counter()
+    prev = c.value
+    for n in incs:
+        c.inc(n)
+        assert c.value >= prev
+        prev = c.value
+    assert abs(c.value - sum(incs)) < 1e-6 * max(sum(incs), 1.0)
+
+
+def test_counter_monotone_deterministic():
+    _counter_monotone([1, 0, 2.5, 1e-9, 1000])
+
+
+def test_counter_rejects_negative():
+    c = Counter()
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 0.0                  # failed inc left no trace
+
+
+def test_gauge_high_water():
+    g = Gauge()
+    for v, peak in [(3, 3), (1, 3), (7, 7), (0, 7)]:
+        g.set(v)
+        assert g.value == v and g.max_seen == peak
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+def _histogram_conserves(values):
+    h = Histogram.of(values)
+    assert sum(h.counts) == h.count == len(values)
+    assert abs(h.sum - sum(values)) < 1e-6 * max(abs(sum(values)), 1.0)
+    if values:
+        assert h.min == min(values) and h.max == max(values)
+
+
+def test_histogram_conservation_deterministic():
+    _histogram_conserves([0.0, 1e-5, 0.3, 99.0, 1e4])
+    _histogram_conserves([])
+
+
+def test_histogram_percentile_matches_numpy():
+    rng = np.random.RandomState(0)
+    vals = rng.exponential(0.1, size=137).tolist()
+    h = Histogram.of(vals)
+    for q in (0, 25, 50, 90, 99, 100):
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(vals, q)), rel=1e-12)
+
+
+def test_histogram_overflow_falls_back_to_buckets():
+    h = Histogram(bounds=(1.0, 2.0), keep=3)
+    for v in (0.5, 1.5, 2.5, 0.7, 1.7):    # 2 past the retention window
+        h.observe(v)
+    assert h.count == 5 and sum(h.counts) == 5
+    p50 = h.percentile(50)                 # bucket-edge interpolation path
+    assert p50 is not None and 0.0 < p50 <= h.max
+
+
+def test_histogram_rejects_bad_bounds():
+    with pytest.raises(ValueError):
+        Histogram(bounds=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram(bounds=(1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (skipped without the optional dependency)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=0, max_value=1e6,
+                              allow_nan=False), max_size=50))
+    def test_counter_monotone_swept(incs):
+        _counter_monotone(incs)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=-1e3, max_value=1e6,
+                              allow_nan=False), max_size=100))
+    def test_histogram_conservation_swept(values):
+        _histogram_conserves(values)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=0, max_value=1e3,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=1, max_size=80),
+           st.floats(min_value=0, max_value=100))
+    def test_histogram_percentile_swept(values, q):
+        assert Histogram.of(values).percentile(q) == pytest.approx(
+            float(np.percentile(values, q)), rel=1e-9, abs=1e-9)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=0, max_value=10,
+                              allow_nan=False), min_size=4, max_size=4))
+    def test_trace_ordering_swept(deltas):
+        """Any nonneg-delta timeline validates; any strictly decreasing
+        adjacent pair raises."""
+        t = np.cumsum(deltas)
+        tr = RequestTrace(id=0, order=0, prompt_len=3, enqueue_s=t[0])
+        tr.mark_admit(t[1])
+        tr.mark_first_token(t[2])
+        tr.mark_retire(t[3])
+        tr.validate()
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(optional test dependency)")
+    def test_obs_property_sweeps():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registry_get_or_create_and_kind_mismatch():
+    r = Registry()
+    assert r.counter("a") is r.counter("a")
+    assert r.counter("d", reason="x") is not r.counter("d", reason="y")
+    with pytest.raises(TypeError):
+        r.gauge("a")                       # same name, different kind
+
+
+def test_registry_snapshot_delta_roundtrip():
+    r = Registry()
+    r.counter("c").inc(3)
+    r.gauge("g").set(7)
+    r.histogram("h").observe(0.01)
+    s1 = r.snapshot()
+    json.dumps(s1)                         # JSON-able
+    r.counter("c").inc(2)
+    d = Registry.delta(r.snapshot(), s1)
+    assert d["c"] == 2.0
+    assert flat_name("d", (("reason", "x"),)) == "d{reason=x}"
+
+
+# ---------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------
+def _mk_trace(order=0, t=(0.0, 0.1, 0.5, 1.5), decode=5):
+    tr = RequestTrace(id=order, order=order, prompt_len=8, enqueue_s=t[0])
+    tr.mark_admit(t[1])
+    tr.mark_first_token(t[2])
+    if decode > 1:
+        tr.mark_chunk(t[3], decode - 1)
+    tr.mark_retire(t[3])
+    return tr
+
+
+def test_trace_derived_spans():
+    tr = _mk_trace()
+    assert tr.queue_s == pytest.approx(0.1)
+    assert tr.ttft_s == pytest.approx(0.5)
+    assert tr.prefill_s == pytest.approx(0.4)
+    assert tr.decode_s == pytest.approx(1.0)
+    assert tr.latency_s == pytest.approx(1.5)
+    assert tr.decode_len == 5
+    assert tr.tpot_s == pytest.approx(1.0 / 4)
+    assert _mk_trace(decode=1).tpot_s is None
+
+
+def test_trace_validate_rejects_disorder_and_missing():
+    tr = RequestTrace(id=0, order=0, prompt_len=1, enqueue_s=1.0)
+    with pytest.raises(ValueError):
+        tr.validate()                      # missing marks
+    tr.mark_admit(0.5)                     # admit BEFORE enqueue
+    tr.mark_first_token(2.0)
+    tr.mark_retire(3.0)
+    with pytest.raises(ValueError):
+        tr.validate()
+
+
+def test_trace_store_lifecycle():
+    s = TraceStore(max_completed=2)
+    traces = [s.start(i, i, 4, 0.0) for i in range(3)]
+    for tr in traces:
+        tr.mark_admit(0.1), tr.mark_first_token(0.2), tr.mark_retire(0.3)
+        s.finish(tr)
+    assert not s.active
+    assert len(s.completed) == 2           # bounded buffer
+    assert len(s.drain_pending()) == 2
+    assert s.drain_pending() == []         # drained
+
+
+# ---------------------------------------------------------------------------
+# Emitter
+# ---------------------------------------------------------------------------
+def test_emitter_roundtrip_file(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    obs = Obs(emit_path=path, emit_every=2)
+    obs.registry.counter("tokens").inc(5)
+    tr = obs.trace_start(0, 0, 4, 0.0)
+    tr.mark_admit(0.1), tr.mark_first_token(0.2)
+    tr.mark_chunk(0.4, 3), tr.mark_retire(0.4)
+    obs.trace_finish(tr)
+    obs.tick()                             # tick 1: below cadence, no flush
+    assert obs.emitter.lines_written == 0
+    obs.tick()                             # tick 2: flush
+    assert obs.emitter.lines_written == 2  # snapshot + the trace
+    obs.close()
+    counts = validate_jsonl(path)
+    assert counts["trace"] == 1 and counts["snapshot"] >= 2
+    lines = [json.loads(l) for l in open(path)]
+    trace = next(l for l in lines if l["type"] == "trace")
+    assert trace["decode_len"] == 4 and trace["ttft_s"] == pytest.approx(0.2)
+    snap = next(l for l in lines if l["type"] == "snapshot")
+    assert snap["counters"]["tokens"] == 5.0
+    assert "trace.ttft_s" in snap["histograms"]
+
+
+def test_emitter_callback_and_validation():
+    got = []
+    reg, traces = Registry(), TraceStore()
+    em = Emitter(reg, traces, callback=got.append, every=1)
+    reg.histogram("h").observe(0.2)
+    em.tick()
+    assert len(got) == 1
+    validate_line(got[0])
+    with pytest.raises(ValueError):
+        validate_line({"type": "nope"})
+    bad = dict(got[0])
+    bad["histograms"] = {"h": {"buckets": [1.0], "counts": [1], "count": 5}}
+    with pytest.raises(ValueError):
+        validate_line(bad)                 # bucket-count conservation
+    with pytest.raises(ValueError):
+        Emitter(reg, traces)               # no sink
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (smoke model, module-scoped)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(n, new=5):
+    rng = np.random.RandomState(0)
+    return [Request(prompt=rng.randint(0, 512, size=rng.randint(3, 12))
+                    .astype(np.int32), max_new_tokens=new, id=i)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, ContinuousEngine],
+                         ids=["batch", "continuous"])
+def test_engine_traces_per_request(setup, engine_cls):
+    """Every retired request leaves a validated trace with TTFT/TPOT, and
+    the result's latency fields agree with the trace's."""
+    cfg, params = setup
+    obs = Obs()
+    kw = (dict(max_batch=2) if engine_cls is Engine
+          else dict(max_slots=2, page_size=8))
+    eng = engine_cls(cfg, params, max_seq=32, precompute=False, obs=obs,
+                     **kw)
+    out = eng.generate(_reqs(4))
+    traces = {tr.order: tr for tr in obs.traces.completed}
+    assert len(traces) == 4 and not obs.traces.active
+    for tr in traces.values():
+        tr.validate()                      # idempotent: already validated
+        assert tr.decode_len == 5
+        assert tr.ttft_s > 0 and tr.tpot_s > 0
+        assert tr.decode_len == sum(n for _, n in tr.chunks) + 1
+    if engine_cls is ContinuousEngine:     # results derive FROM the traces
+        by_id = {tr.id: tr for tr in traces.values()}
+        for r in out:
+            assert r["latency_s"] == pytest.approx(
+                by_id[r["id"]].latency_s)
+    st = eng.stats()
+    assert st["requests"] == 4 and st["tokens"] == 20
+    assert obs.registry.histogram("trace.ttft_s").count == 4
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, ContinuousEngine],
+                         ids=["batch", "continuous"])
+def test_engine_disabled_obs_keeps_stats(setup, engine_cls):
+    """enabled=False: no traces/histograms, but stats() (registry counters)
+    still work — the zero-overhead telemetry contract."""
+    cfg, params = setup
+    obs = Obs(enabled=False)
+    kw = (dict(max_batch=2) if engine_cls is Engine
+          else dict(max_slots=2, page_size=8))
+    eng = engine_cls(cfg, params, max_seq=32, precompute=False, obs=obs,
+                     **kw)
+    eng.generate(_reqs(3))
+    assert not obs.traces.completed and not obs.traces.active
+    assert obs.registry.histogram("trace.ttft_s").count == 0
+    st = eng.stats()
+    assert st["requests"] == 3 and st["tokens"] == 15
+    assert st["tokens_per_s"] > 0
+
+
+def test_engine_stats_schema_unified(setup):
+    """Both engines expose the ENGINE_COUNTERS schema plus their legacy
+    alias (docs/observability.md)."""
+    from repro.serve.engine import ENGINE_COUNTERS
+    cfg, params = setup
+    b = Engine(cfg, params, max_batch=2, max_seq=32, precompute=False)
+    c = ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=8,
+                         precompute=False)
+    b.generate(_reqs(2))
+    c.generate(_reqs(2))
+    sb, sc = b.stats(), c.stats()
+    for k in ENGINE_COUNTERS + ("prompt_pad_waste", "tokens_per_s",
+                                "engine"):
+        assert k in sb and k in sc, k
+    assert sb["engine"] == "batch" and sc["engine"] == "continuous"
+    assert sb["batches"] == sb["dispatches"]           # legacy aliases
+    assert sc["decode_dispatches"] == sc["dispatches"]
+    assert sc["scale_growths"] == 0                    # f32 pool: no quant
+
+
+def test_continuous_emitter_end_to_end(setup, tmp_path):
+    """ContinuousEngine + emitter: schema-valid JSONL with gauge series."""
+    cfg, params = setup
+    path = str(tmp_path / "serve.jsonl")
+    obs = Obs(emit_path=path, emit_every=1)
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32,
+                           page_size=8, precompute=False, obs=obs)
+    eng.generate(_reqs(4))
+    obs.close()
+    counts = validate_jsonl(path)
+    assert counts["trace"] == 4 and counts["snapshot"] >= 2
+    snaps = [json.loads(l) for l in open(path)
+             if json.loads(l)["type"] == "snapshot"]
+    assert "sched.queue_depth" in snaps[-1]["gauges"]
+    assert "pool.free_pages" in snaps[-1]["gauges"]
+    assert snaps[-1]["histograms"]["trace.ttft_s"]["count"] == 4
