@@ -36,6 +36,14 @@ the same saturated drain with traces/histograms enabled vs disabled
 engine's request traces and cross-checked against the legacy per-result
 computation.
 
+A fifth, ``overload_goodput``, measures deadline-aware GOODPUT under
+overload: every request carries a deadline, and the same Poisson workload
+is offered at 1x/2x/4x the base rate.  Goodput counts only tokens of
+requests that finished inside their deadline — requests the engine
+timed out (in queue or in flight) produced nothing a client would read.
+The lifecycle invariant rides along: at every oversubscription the engine
+must surface EXACTLY ONE terminal result per request (zero lost).
+
   PYTHONPATH=src python benchmarks/bench_serving.py --requests 24 \
       --out BENCH_serving.json
   PYTHONPATH=src python benchmarks/bench_serving.py --smoke
@@ -43,6 +51,7 @@ computation.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -204,6 +213,49 @@ def bench_obs_overhead(cfg, params, reqs, *, engine_kw, iters) -> dict:
     return out
 
 
+def bench_overload_goodput(cfg, params, reqs, base_arrivals, *, engine_kw,
+                           deadline_s, factors=(1, 2, 4)) -> dict:
+    """Deadline-aware goodput vs offered load.  One engine serves every
+    factor (warm once); arrival times compress by the factor, so 4x offers
+    the same requests at 4x the base rate.  Per factor: terminal-status
+    census (every request must reach exactly one — zero lost), goodput
+    (tokens of in-deadline finishes per second), and the served fraction."""
+    from repro.serve.scheduler import FINISHED_STATUSES
+    eng = ContinuousEngine(cfg, params, obs=Obs(), **engine_kw)
+    eng.generate(reqs)                                  # compile + warm
+    if deadline_s is None:
+        # self-calibrate to this host: a deadline most requests make at 1x
+        # and progressively miss as the offered rate climbs
+        t0 = time.perf_counter()
+        eng.generate(reqs)                              # post-compile drain
+        deadline_s = round(0.75 * (time.perf_counter() - t0), 3)
+    dl_reqs = [dataclasses.replace(r, deadline_s=deadline_s) for r in reqs]
+    out = {}
+    for f in factors:
+        arrivals = [t / f for t in base_arrivals]
+        t0 = time.perf_counter()
+        res = eng.generate(dl_reqs, arrival_times=arrivals)
+        makespan = time.perf_counter() - t0
+        assert len(res) == len(reqs), "lost requests under overload"
+        statuses = {}
+        for r in res:
+            assert r["status"] is not None
+            statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+        good = [r for r in res if r["status"] in FINISHED_STATUSES]
+        good_tokens = sum(r["decode_len"] for r in good)
+        out[f"{f}x"] = {
+            "offered_rps": len(reqs) / max(base_arrivals[-1] / f, 1e-9),
+            "deadline_s": deadline_s,
+            "makespan_s": makespan,
+            "statuses": statuses,
+            "lost_requests": len(reqs) - sum(statuses.values()),
+            "served_frac": len(good) / len(reqs),
+            "goodput_tokens_per_s": good_tokens / max(makespan, 1e-9),
+        }
+        assert out[f"{f}x"]["lost_requests"] == 0
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -217,6 +269,9 @@ def main(argv=None):
                          "the batch engine so the queue builds")
     ap.add_argument("--iters", type=int, default=3,
                     help="saturated-mode timing repeats (best kept)")
+    ap.add_argument("--overload-deadline-s", type=float, default=None,
+                    help="overload_goodput: per-request deadline; default "
+                         "self-calibrates to 0.75x a saturated drain")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI workload (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -273,9 +328,12 @@ def main(argv=None):
     }
     rows["obs_overhead"] = bench_obs_overhead(
         cfg, params, reqs, engine_kw=engine_kw, iters=args.iters)
+    rows["overload_goodput"] = bench_overload_goodput(
+        cfg, params, reqs, arrivals, engine_kw=engine_kw,
+        deadline_s=args.overload_deadline_s)
     for section, modes in rows.items():
         for name, r in modes.items():
-            if not isinstance(r, dict):
+            if not isinstance(r, dict) or "tokens_per_s" not in r:
                 continue
             lat = ("" if "p50_latency_s" not in r or r["p50_latency_s"] is
                    None else f", p50 {r['p50_latency_s'] * 1e3:6.0f}ms"
@@ -311,6 +369,14 @@ def main(argv=None):
         "kv_slots_ratio_int8_vs_bf16": (kvm["int8"]["slots"]
                                         / kvm["bf16"]["slots"]),
         "obs_overhead_frac": rows["obs_overhead"]["overhead_frac"],
+        "overload_goodput_tokens_per_s": {
+            f: rows["overload_goodput"][f]["goodput_tokens_per_s"]
+            for f in rows["overload_goodput"]},
+        "overload_served_frac": {
+            f: rows["overload_goodput"][f]["served_frac"]
+            for f in rows["overload_goodput"]},
+        "overload_lost_requests": sum(
+            r["lost_requests"] for r in rows["overload_goodput"].values()),
     }
     print(f"[bench_serving] saturated: continuous/batch = "
           f"{result['speedup_continuous_vs_batch']:.2f}x tokens/s, "
@@ -327,6 +393,13 @@ def main(argv=None):
     print(f"[bench_serving] obs overhead: "
           f"{result['obs_overhead_frac'] * 100:+.2f}% tokens/s "
           f"(enabled vs disabled telemetry)")
+    og = rows["overload_goodput"]
+    curve = ", ".join(
+        f"{f}: {og[f]['goodput_tokens_per_s']:.1f} tok/s "
+        f"({og[f]['served_frac'] * 100:.0f}% in-deadline)" for f in og)
+    print(f"[bench_serving] overload goodput "
+          f"(deadline {next(iter(og.values()))['deadline_s']}s, "
+          f"lost={result['overload_lost_requests']}): {curve}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

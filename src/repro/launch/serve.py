@@ -44,6 +44,19 @@ def main():
                     help="continuous: admission token budget")
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="continuous: decode steps per device dispatch")
+    ap.add_argument("--admission", default="optimistic",
+                    choices=["optimistic", "reserve"],
+                    help="continuous: optimistic page admission (preempt on "
+                         "exhaustion) or legacy worst-case reservation")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="continuous: bounded submit queue; requests beyond "
+                         "it are REJECTED (backpressure)")
+    ap.add_argument("--max-preemptions", type=int, default=4,
+                    help="continuous: per-request preemption bound before a "
+                         "slot stalls instead of thrashing")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="continuous: per-request deadline (seconds from "
+                         "arrival); expired requests go terminal TIMEOUT")
     ap.add_argument("--paged-attn", default="stream",
                     choices=["stream", "gather"],
                     help="continuous: fused paged flash-decode (default) or "
@@ -102,7 +115,9 @@ def main():
             decode_chunk=args.decode_chunk, sample=args.sample,
             seed=args.seed, eos_id=args.eos_id,
             precompute=not args.no_precompute, paged_attn=args.paged_attn,
-            quant=quant, obs=obs)
+            quant=quant, obs=obs, admission=args.admission,
+            max_queue=args.max_queue,
+            max_preemptions=args.max_preemptions)
     else:
         if args.kv_dtype != "f32":
             print(f"[launch.serve] note: --kv-dtype {args.kv_dtype} applies "
@@ -118,14 +133,17 @@ def main():
     # prompts cover the smoke sliding window (16): the ring-buffer prefill
     # keeps the window tail and needs S >= window for SWA archs
     reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, size=rng.randint(
-        16, 32)).astype(np.int32), max_new_tokens=args.new_tokens, id=i)
+        16, 32)).astype(np.int32), max_new_tokens=args.new_tokens, id=i,
+        deadline_s=args.deadline_s)
         for i in range(args.requests)]
     t0 = time.time()
     results = engine.generate(reqs)
     dt = time.time() - t0
     toks = sum(r["decode_len"] for r in results)
-    pre = sum(r["prefill_s"] for r in results) / max(len(results), 1)
-    deco = sum(r["decode_s"] for r in results) / max(len(results), 1)
+    # unserved terminals (TIMEOUT/REJECTED/...) carry no prefill span
+    served = [r for r in results if r.get("prefill_s") is not None]
+    pre = sum(r["prefill_s"] for r in served) / max(len(served), 1)
+    deco = sum(r["decode_s"] for r in served) / max(len(served), 1)
     print(f"[launch.serve] {args.arch} ({args.engine}): {len(results)} "
           f"requests, {toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s; "
           f"mean prefill {pre * 1e3:.0f}ms / decode {deco * 1e3:.0f}ms)")
@@ -147,6 +165,10 @@ def main():
         print(f"[launch.serve] quant: kv_dtype={qp['kv_dtype']} "
               f"weights={'int' + str(qp['weight_bits']) if qp['quant_weights'] else 'f32'} "
               f"kv_pool_bytes={st['kv_pool_bytes'] / 1e6:.1f}MB")
+        nonzero = {s: n for s, n in st["statuses"].items() if n}
+        print(f"[launch.serve] lifecycle: statuses={nonzero} "
+              f"admission={st['admission']} preempted={st['preempted']} "
+              f"stalled={st['stalled']} anomalies={st['anomalies']}")
     else:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "

@@ -71,11 +71,14 @@ class Obs:
             return
         self.traces.finish(trace)
         reg = self.registry
-        reg.histogram("trace.queue_s").observe(trace.queue_s)
-        reg.histogram("trace.ttft_s").observe(trace.ttft_s)
-        reg.histogram("trace.latency_s").observe(trace.latency_s)
-        if trace.tpot_s is not None:
-            reg.histogram("trace.tpot_s").observe(trace.tpot_s)
+        # unserved terminals (rejected/cancelled in queue, ...) lack some
+        # marks; fold only the spans their timeline defines
+        for name, v in (("trace.queue_s", trace.queue_s),
+                        ("trace.ttft_s", trace.ttft_s),
+                        ("trace.latency_s", trace.latency_s),
+                        ("trace.tpot_s", trace.tpot_s)):
+            if v is not None:
+                reg.histogram(name).observe(v)
 
     # -- emitter cadence --------------------------------------------------
     def tick(self) -> None:

@@ -36,9 +36,18 @@ from .trace import TraceStore
 
 SNAPSHOT_KEYS = ("type", "seq", "t_s", "counters", "gauges", "histograms")
 TRACE_KEYS = ("type", "t_s", "id", "order", "prompt_len", "decode_len",
-              "enqueue_s", "admit_s", "first_token_s", "retire_s",
+              "status", "enqueue_s", "admit_s", "first_token_s", "retire_s",
               "queue_s", "ttft_s", "prefill_s", "decode_s", "tpot_s",
-              "latency_s", "chunks")
+              "latency_s", "chunks", "preemptions")
+
+# Terminal statuses a trace line may carry (serve/scheduler.py defines the
+# canonical constants; the emitter validates against the same literals —
+# duplicated here so the SCHEMA has no import edge into the serve stack).
+# None = legacy served trace (batch-engine lines predating statuses).
+TRACE_STATUSES = (None, "FINISHED_EOS", "FINISHED_BUDGET", "TIMEOUT",
+                  "CANCELLED", "REJECTED", "FAILED")
+# statuses whose timeline must carry all four marks + >=1 decoded token
+_SERVED = (None, "FINISHED_EOS", "FINISHED_BUDGET")
 
 
 class Emitter:
@@ -126,15 +135,25 @@ def validate_line(obj: Dict) -> None:
         missing = [k for k in TRACE_KEYS if k not in obj]
         if missing:
             raise ValueError(f"trace missing keys {missing}")
-        order = [obj["enqueue_s"], obj["admit_s"], obj["first_token_s"],
+        status = obj["status"]
+        if status not in TRACE_STATUSES:
+            raise ValueError(f"trace {obj['order']}: unknown status "
+                             f"{status!r}")
+        marks = [obj["enqueue_s"], obj["admit_s"], obj["first_token_s"],
                  obj["retire_s"]]
-        if any(not _num(t) for t in order):
+        served = status in _SERVED
+        required = marks if served else [marks[0], marks[3]]
+        if any(not _num(t) for t in required):
             raise ValueError(f"trace {obj['order']}: non-numeric marks "
-                             f"{order}")
-        if any(b < a for a, b in zip(order, order[1:])):
+                             f"{marks}")
+        present = [t for t in marks if t is not None]
+        if any(not _num(t) for t in present):
+            raise ValueError(f"trace {obj['order']}: non-numeric marks "
+                             f"{marks}")
+        if any(b < a for a, b in zip(present, present[1:])):
             raise ValueError(f"trace {obj['order']}: span marks out of "
-                             f"order: {order}")
-        if obj["decode_len"] < 1:
+                             f"order: {marks}")
+        if served and obj["decode_len"] < 1:
             raise ValueError(f"trace {obj['order']}: retired with "
                              f"decode_len {obj['decode_len']}")
     else:

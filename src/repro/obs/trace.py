@@ -22,6 +22,15 @@ drift):
 Ordering is an invariant, not a convention: ``finish`` raises if the
 timeline is not ``enqueue ≤ admit ≤ first_token ≤ retire`` (hypothesis-
 swept in tests/test_obs.py).
+
+Lifecycle hardening (see docs/serving.md) adds a terminal ``status`` and
+``preemptions`` spans.  A request can now go terminal WITHOUT ever being
+served — rejected at submit, cancelled or expired in queue, failed at
+prefill — so validation is status-aware: the full four-mark timeline is
+required only for the served outcomes (``status`` None — the legacy
+engines — or ``FINISHED_*``); other terminals require just
+``enqueue ≤ retire`` plus ordering over whichever marks exist, and the
+derived spans return None when their marks are missing.
 """
 from __future__ import annotations
 
@@ -42,6 +51,11 @@ class RequestTrace:
     decode_len: int = 0
     # (t_end_s, new_tokens) per decode dispatch that advanced this request
     chunks: List = dataclasses.field(default_factory=list)
+    # terminal status (serve/scheduler.py constants); None = legacy served
+    status: Optional[str] = None
+    # (t_s, recompute_tokens) per preemption: the request was evicted and
+    # re-queued with recompute_tokens to teacher-force through prefill
+    preemptions: List = dataclasses.field(default_factory=list)
 
     # -- lifecycle marks --------------------------------------------------
     def mark_admit(self, t: float) -> None:
@@ -55,45 +69,72 @@ class RequestTrace:
         self.chunks.append((float(t), int(new_tokens)))
         self.decode_len += int(new_tokens)
 
+    def mark_preempt(self, t: float, recompute_tokens: int) -> None:
+        self.preemptions.append((float(t), int(recompute_tokens)))
+
     def mark_retire(self, t: float) -> None:
         self.retire_s = float(t)
 
-    # -- derived spans ----------------------------------------------------
     @property
-    def queue_s(self) -> float:
+    def served(self) -> bool:
+        """Did this request run to a normal finish?  Only then is the full
+        four-mark timeline guaranteed (status None = legacy engines)."""
+        return self.status is None or self.status.startswith("FINISHED")
+
+    # -- derived spans (None when a required mark is missing) -------------
+    @property
+    def queue_s(self) -> Optional[float]:
+        if self.admit_s is None:
+            return None
         return self.admit_s - self.enqueue_s
 
     @property
-    def ttft_s(self) -> float:
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
         return self.first_token_s - self.enqueue_s
 
     @property
-    def prefill_s(self) -> float:
+    def prefill_s(self) -> Optional[float]:
+        if self.first_token_s is None or self.admit_s is None:
+            return None
         return self.first_token_s - self.admit_s
 
     @property
-    def decode_s(self) -> float:
+    def decode_s(self) -> Optional[float]:
+        if self.retire_s is None or self.first_token_s is None:
+            return None
         return self.retire_s - self.first_token_s
 
     @property
     def tpot_s(self) -> Optional[float]:
-        if self.decode_len <= 1:
+        if self.decode_len <= 1 or self.decode_s is None:
             return None
         return self.decode_s / (self.decode_len - 1)
 
     @property
-    def latency_s(self) -> float:
+    def latency_s(self) -> Optional[float]:
+        if self.retire_s is None:
+            return None
         return self.retire_s - self.enqueue_s
 
     def validate(self) -> None:
-        """Span-ordering invariant; raises ValueError on a broken timeline."""
+        """Span-ordering invariant; raises ValueError on a broken timeline.
+
+        Served traces (status None / FINISHED_*) must carry all four marks.
+        Unserved terminals (TIMEOUT / CANCELLED / REJECTED / FAILED) may
+        lack admit/first-token — they still need enqueue + retire and
+        ordering over the marks they do have."""
         marks = [("enqueue", self.enqueue_s), ("admit", self.admit_s),
                  ("first_token", self.first_token_s),
                  ("retire", self.retire_s)]
-        missing = [n for n, t in marks if t is None]
+        required = (marks if self.served
+                    else [marks[0], marks[3]])
+        missing = [n for n, t in required if t is None]
         if missing:
             raise ValueError(f"trace {self.order}: missing marks {missing}")
-        for (an, at), (bn, bt) in zip(marks, marks[1:]):
+        present = [(n, t) for n, t in marks if t is not None]
+        for (an, at), (bn, bt) in zip(present, present[1:]):
             if bt < at:
                 raise ValueError(f"trace {self.order}: {bn} ({bt}) before "
                                  f"{an} ({at})")
@@ -105,6 +146,7 @@ class RequestTrace:
             "order": self.order,
             "prompt_len": self.prompt_len,
             "decode_len": self.decode_len,
+            "status": self.status,
             "enqueue_s": self.enqueue_s,
             "admit_s": self.admit_s,
             "first_token_s": self.first_token_s,
@@ -116,6 +158,7 @@ class RequestTrace:
             "tpot_s": self.tpot_s,
             "latency_s": self.latency_s,
             "chunks": [list(c) for c in self.chunks],
+            "preemptions": [list(p) for p in self.preemptions],
         }
 
 

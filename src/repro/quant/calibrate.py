@@ -132,7 +132,7 @@ def parity_report(cfg: ArchConfig, params, *, policy: QuantPolicy,
     spad = n_pages * page_size
     padded = np.zeros(spad, np.int32)
     padded[:S] = prompt
-    first_q, pool = dec.make_prefill_pack_step(cfg, n_pages, page_size)(
+    first_q, _ok, pool = dec.make_prefill_pack_step(cfg, n_pages, page_size)(
         params_q, _prompt_batch(cfg, padded), pool, table[0, :n_pages],
         jnp.int32(S))
 

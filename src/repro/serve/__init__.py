@@ -1,2 +1,2 @@
-from . import decode, engine, kvcache, params, scheduler  # noqa: F401
+from . import decode, engine, faults, kvcache, params, scheduler  # noqa: F401
 from .params import precompute_serving_params, strip_serving_params  # noqa: F401

@@ -125,9 +125,11 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
     ``i <= slot position``).
 
     Returns ``prefill_pack(params, batch, pool, pages, true_len)`` ->
-    ``(first_token scalar int32, pool)`` — the first token is the greedy
-    argmax at the prompt's true last position (same op the batch engine
-    runs on its prefill logits).
+    ``(first_token scalar int32, ok scalar bool, pool)`` — the first token
+    is the greedy argmax at the prompt's true last position (same op the
+    batch engine runs on its prefill logits); ``ok`` is a cheap device-side
+    finiteness check on those logits (False = the slot is poisoned and the
+    engine retires it FAILED instead of streaming garbage).
     """
     from . import kvcache as kvc
     model = build_model(cfg)
@@ -138,10 +140,11 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
         logits, dense = model.prefill(params, batch, cache)
         last = jax.lax.dynamic_index_in_dim(logits[0], true_len - 1, 0,
                                             keepdims=False)
+        ok = jnp.all(jnp.isfinite(last))
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
         pool = kvc.pack_prefill_cache(pool, dense, pages, page_size,
                                       true_len=true_len)
-        return nxt, pool
+        return nxt, ok, pool
     return prefill_pack
 
 
@@ -149,7 +152,8 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                            sample: bool = False, temperature: float = 1.0,
                            eos_id: Optional[int] = None, seed: int = 0,
                            logits_sharding=None,
-                           paged_impl: str = "stream") -> Callable:
+                           paged_impl: str = "stream",
+                           nan_guard: bool = True) -> Callable:
     """Device-resident decode over paged slots: one dispatch per ``chunk``.
 
     The carry holds per-slot (token, position, remaining budget, done) —
@@ -166,8 +170,16 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
     carries a ``(B, maxp * page, Hkv, D)`` gathered KV view per layer;
     "gather" keeps the PR 3 materialized-view path as the parity oracle.
 
+    With ``nan_guard`` (default) the step checks its last-position logits
+    for NaN/Inf ON DEVICE (one ``isfinite`` reduce over the logit row —
+    noise next to the matmuls).  A non-finite slot freezes exactly like an
+    EOS slot (no token appended, position/budget stop advancing, writes
+    route to the trash page) and is flagged in the returned ``anom`` mask
+    so the engine retires it with status FAILED instead of streaming
+    garbage tokens.
+
     Returns ``decode_loop(params, cur, pool, table, pos, rem)`` ->
-    ``(buf (B, chunk) int32, cur, pool, pos, rem, done)``.
+    ``(buf (B, chunk) int32, cur, pool, pos, rem, done, anom)``.
 
     Telemetry contract (repro.obs): dispatch is async, so the engine
     fences the loop outputs (``jax.block_until_ready``) before stamping a
@@ -184,6 +196,8 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                                          paged_impl=paged_impl)
         if logits_sharding is not None:
             logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        finite = (jnp.all(jnp.isfinite(logits[:, -1]), axis=-1)
+                  if nan_guard else jnp.ones(cur.shape[0], bool))
         if sample:
             # fold in slot index AND position: slots at the same position
             # (e.g. identical prompts admitted together) must not draw from
@@ -197,32 +211,37 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                 keys, logits[:, -1])
         else:
             nxt = jnp.argmax(logits[:, -1], axis=-1)
-        return nxt.astype(jnp.int32), pool
+        return nxt.astype(jnp.int32), finite, pool
 
     def decode_loop(params, cur, pool, table, pos, rem):
         B = cur.shape[0]
         done0 = rem <= 0
+        anom0 = jnp.zeros(B, bool)
         buf = jnp.full((B, chunk), fill, jnp.int32)
 
         def cond_fn(st):
             return jnp.logical_and(st[0] < chunk, ~jnp.all(st[6]))
 
         def body_fn(st):
-            j, buf_, cur_, pool_, pos_, rem_, done_ = st
+            j, buf_, cur_, pool_, pos_, rem_, done_, anom_ = st
             masked = jnp.where(done_, -1, pos_)
-            nxt, pool_ = step(params, cur_, pool_, masked, table)
-            tok = jnp.where(done_, jnp.int32(fill), nxt)
+            nxt, finite, pool_ = step(params, cur_, pool_, masked, table)
+            # a poisoned slot freezes like EOS: no token, no advance — the
+            # bad logits never pick a token and the slot retires FAILED
+            bad = ~done_ & ~finite
+            halt = done_ | bad
+            tok = jnp.where(halt, jnp.int32(fill), nxt)
             buf_ = jax.lax.dynamic_update_slice(buf_, tok[:, None], (0, j))
-            pos_ = jnp.where(done_, pos_, pos_ + 1)
-            rem_ = jnp.where(done_, rem_, rem_ - 1)
-            nd = done_ | (rem_ <= 0)
+            pos_ = jnp.where(halt, pos_, pos_ + 1)
+            rem_ = jnp.where(halt, rem_, rem_ - 1)
+            nd = halt | (rem_ <= 0)
             if eos_id is not None:
-                nd = nd | (~done_ & (nxt == eos_id))
-            cur_ = jnp.where(done_, cur_, nxt)
-            return (j + 1, buf_, cur_, pool_, pos_, rem_, nd)
+                nd = nd | (~halt & (nxt == eos_id))
+            cur_ = jnp.where(halt, cur_, nxt)
+            return (j + 1, buf_, cur_, pool_, pos_, rem_, nd, anom_ | bad)
 
-        st = (jnp.int32(0), buf, cur, pool, pos, rem, done0)
-        _, buf, cur, pool, pos, rem, done = jax.lax.while_loop(
+        st = (jnp.int32(0), buf, cur, pool, pos, rem, done0, anom0)
+        _, buf, cur, pool, pos, rem, done, anom = jax.lax.while_loop(
             cond_fn, body_fn, st)
-        return buf, cur, pool, pos, rem, done
+        return buf, cur, pool, pos, rem, done, anom
     return decode_loop

@@ -47,7 +47,8 @@ from ..quant.codec import QuantPolicy
 from . import decode as dec
 from . import kvcache as kvc
 from .params import precompute_serving_params
-from .scheduler import Scheduler
+from .scheduler import (CANCELLED, FAILED, FINISHED_BUDGET, FINISHED_EOS,
+                        REJECTED, TIMEOUT, Scheduler)
 
 # Counters both engines keep in their obs registry under the SAME names and
 # units — the unified stats() schema (docs/observability.md).  ``*_s``
@@ -78,6 +79,10 @@ class Request:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
     id: int = 0
+    # relative deadline (seconds after arrival; None = none).  Enforced by
+    # the continuous engine both in-queue and in-flight — the batch engine
+    # ignores it (its whole batch is one dispatch; see docs/serving.md).
+    deadline_s: Optional[float] = None
 
 
 class Engine:
@@ -238,10 +243,15 @@ class Engine:
             toks = gen[i, :min(r.max_new_tokens, steps)].tolist()
             if self.eos_id is not None and self.eos_id in toks:
                 toks = toks[:toks.index(self.eos_id) + 1]
+            status = (FINISHED_EOS if (self.eos_id is not None and toks
+                                       and toks[-1] == self.eos_id)
+                      else FINISHED_BUDGET)
             out.append({
                 "id": r.id,
                 "tokens": toks,
                 "decode_len": len(toks),
+                "status": status,
+                "preemptions": 0,
                 "tokens_per_s": len(toks) / max(decode_s, 1e-9),
                 "prefill_s": prefill_s,
                 "decode_s": decode_s,
@@ -261,6 +271,7 @@ class Engine:
             for tr, res in zip(traces, out):
                 if tr is None:
                     continue
+                tr.status = res["status"]
                 tr.mark_admit(self.obs.rebase(t0))
                 tr.mark_first_token(self.obs.rebase(t1))
                 if res["decode_len"] > 1:
@@ -305,6 +316,22 @@ class ContinuousEngine:
     ``generate(reqs, arrival_times=...)`` simulates an online arrival
     process against wall-clock time (benchmarks); without arrival times the
     whole list queues at t=0 and drains under the admission policy.
+
+    Request lifecycle (docs/serving.md): every submitted request reaches
+    exactly one terminal status.  ``admission="optimistic"`` (default)
+    reserves only the prefill pages at admit and grows pages before each
+    decode dispatch — on pool exhaustion the youngest running slot is
+    PREEMPTED (pages freed, request re-queued for recompute-prefill with
+    its generated tokens teacher-forced through the prompt), bounded by
+    ``max_preemptions`` per request; greedy outputs stay token-identical
+    to the oracle across preemption.  Deadlines (``Request.deadline_s``,
+    relative to arrival) are enforced in-queue and in-flight (TIMEOUT);
+    ``cancel(request_id)`` works in both places (CANCELLED); ``max_queue``
+    bounds the submit queue (REJECTED backpressure); ``drain()`` stops
+    intake, sheds fresh queued work, finishes in-flight requests, and
+    flushes the obs emitter.  A ``faults`` injector (serve/faults.py)
+    hooks allocator failures, dispatch delays, and slot corruption — the
+    NaN/Inf guard (``nan_guard``) retires poisoned slots FAILED.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
@@ -316,7 +343,12 @@ class ContinuousEngine:
                  eos_id: Optional[int] = None, mesh=None,
                  precompute: bool = True, paged_attn: str = "stream",
                  quant: Optional[QuantPolicy] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 admission: str = "optimistic",
+                 max_queue: Optional[int] = None,
+                 max_preemptions: int = 4,
+                 nan_guard: bool = True,
+                 faults=None):
         if paged_attn not in ("stream", "gather"):
             raise ValueError(f"paged_attn {paged_attn!r}: "
                              f"expected 'stream' or 'gather'")
@@ -372,26 +404,35 @@ class ContinuousEngine:
         # and scheduler write their own gauges/counters into it
         self.obs = obs if obs is not None else Obs()
         reg = self.obs.registry
+        self.faults = faults
         self.block_table = kvc.BlockTable(
-            kvc.PageAllocator(num_pages, registry=reg), max_slots,
-            page_size, self.max_pages_per_slot)
+            kvc.PageAllocator(num_pages, registry=reg,
+                              fault=(faults.alloc_fault
+                                     if faults is not None else None)),
+            max_slots, page_size, self.max_pages_per_slot)
         self.scheduler = Scheduler(self.block_table, max_seq=max_seq,
                                    max_tokens_in_flight=max_tokens_in_flight,
-                                   registry=reg)
+                                   registry=reg, admission=admission,
+                                   max_queue=max_queue,
+                                   max_preemptions=max_preemptions)
         # ONE fixed-size decode program: chunk size never varies, so the
         # loop compiles exactly once — adaptive sizing would dodge some
         # frozen-slot steps but risks multi-second mid-serving compiles the
         # first time an unseen size comes up (disastrous for tail latency)
         self._loop = jax.jit(dec.make_paged_decode_loop(
             cfg, decode_chunk, sample=sample, temperature=temperature,
-            eos_id=eos_id, seed=seed, paged_impl=paged_attn),
+            eos_id=eos_id, seed=seed, paged_impl=paged_attn,
+            nan_guard=nan_guard),
             donate_argnums=(2,))
+        self.nan_guard = nan_guard
         self._prefills: Dict[int, object] = {}
         self._cur = np.zeros(max_slots, np.int32)
         self._pos = np.zeros(max_slots, np.int32)
         self._rem = np.zeros(max_slots, np.int32)
-        self._dev_table = None              # device copy; None = stale
+        self._dev_table = None              # device copy of the block table
+        self._table_version = -1            # BlockTable.version it mirrors
         self._ctr = {n: reg.counter(n) for n in ENGINE_COUNTERS}
+        self._c_anom = reg.counter("engine.anomalies")
         self._h_prefill = reg.histogram("engine.prefill_dispatch_s")
         self._h_chunk = reg.histogram("engine.decode_chunk_s")
         self._h_occup = reg.histogram("sched.slot_occupancy",
@@ -408,7 +449,11 @@ class ContinuousEngine:
                              if self.obs.enabled and self.quant.kv_quantized
                              else None)
         self._traces: Dict[int, object] = {}     # submission order -> trace
-        self._t0_perf = None                # generate()'s t_start (perf)
+        self._t0_perf = None                # serve-clock origin (perf)
+        self._results: Dict[int, Dict] = {}      # order -> terminal result
+        self._cancels: set = set()          # request ids pending cancel
+        self._stall_streak = 0              # consecutive all-stalled rounds
+        self._stall_limit = 3               # then FAIL the youngest stalled
 
     # -- jit caches -------------------------------------------------------
     def _prefill_fn(self, n_pages: int):
@@ -419,6 +464,86 @@ class ContinuousEngine:
             self._prefills[n_pages] = fn
         return fn
 
+    # -- public lifecycle API ---------------------------------------------
+    def _now(self) -> float:
+        """Seconds on the serve clock (0 at the first submit)."""
+        if self._t0_perf is None:
+            self._t0_perf = time.perf_counter()
+        return time.perf_counter() - self._t0_perf
+
+    def submit(self, request: Request, arrival_s: float = 0.0) -> int:
+        """Queue one request; returns its order (the key for results).
+
+        A rejected submission (queue bound hit / draining) still gets an
+        order and an immediate REJECTED terminal result — callers never
+        lose a request."""
+        if len(request.prompt) > self.max_seq:
+            raise ValueError(f"prompt length {len(request.prompt)} exceeds "
+                             f"max_seq {self.max_seq}")
+        self._now()                          # pin the serve clock
+        order, accepted = self.scheduler.submit(request, arrival_s)
+        if self.obs.enabled:
+            # a request ENQUEUES at its (possibly simulated) arrival — the
+            # trace timeline starts there so queue_s covers admission wait
+            self._traces[order] = self.obs.trace_start(
+                request.id, order, len(request.prompt),
+                self.obs.rebase(self._t0_perf) + arrival_s)
+        if not accepted:
+            self._finish_unserved(order, request, [], REJECTED)
+        return order
+
+    def cancel(self, request_id) -> bool:
+        """Cancel a request wherever it lives.  Queued: the CANCELLED
+        result materializes immediately.  Running: the slot is retired at
+        the next step boundary (its in-flight chunk is abandoned).
+        Returns False when the id is unknown or already terminal."""
+        found = self.scheduler.cancel(request_id)
+        if found is None:
+            return False
+        kind, obj = found
+        if kind == "queued":
+            self._finish_unserved(obj.order, obj.request, obj.resume_tokens,
+                                  CANCELLED, preemptions=obj.preemptions)
+        else:
+            self._cancels.add(request_id)
+        return True
+
+    def step(self) -> bool:
+        """Run one scheduler round: expire deadlines, apply cancels, admit
+        + prefill, grow pages (possibly preempting), dispatch one decode
+        chunk, retire finished slots.  Admission honors submit-time
+        arrival stamps (a request whose simulated arrival is still in the
+        future stays queued).  Returns True if anything happened — the
+        low-level API the chaos harness drives; ``generate`` is a loop
+        over this."""
+        with dist_ctx.activation_policy(self.mesh):
+            now = self._now()
+            return self._step(now, arrived_before=now)
+
+    def drain(self) -> List[Dict]:
+        """Graceful shutdown: stop admitting, shed fresh queued work as
+        REJECTED, run in-flight requests (including preempted ones) to
+        their terminal state, flush + close the obs emitter.  Returns the
+        results of everything that went terminal during the drain."""
+        before = set(self._results)
+        self.scheduler.close_intake()
+        for entry in self.scheduler.flush_queue():
+            self._finish_unserved(entry.order, entry.request,
+                                  entry.resume_tokens, REJECTED,
+                                  preemptions=entry.preemptions)
+        with dist_ctx.activation_policy(self.mesh):
+            while not self.scheduler.idle:
+                if not self._step(self._now()):
+                    raise RuntimeError("drain stall: in-flight work cannot "
+                                       "make progress")
+        self.obs.close()
+        return [self._results[o] for o in sorted(set(self._results) - before)]
+
+    def result(self, order: int, pop: bool = False) -> Optional[Dict]:
+        """Terminal result for a submission order (None while in flight)."""
+        return (self._results.pop(order, None) if pop
+                else self._results.get(order))
+
     # -- serving loop -----------------------------------------------------
     def generate(self, reqs: Sequence[Request],
                  arrival_times: Optional[Sequence[float]] = None
@@ -428,63 +553,141 @@ class ContinuousEngine:
                 raise ValueError(              # running slots' pages
                     f"prompt length {len(r.prompt)} exceeds max_seq "
                     f"{self.max_seq}")
-        t_start = time.perf_counter()
-        self._t0_perf = t_start
+        self._t0_perf = time.perf_counter()
         arr = ([0.0] * len(reqs) if arrival_times is None
                else [float(a) for a in arrival_times])
-        orders = [self.scheduler.submit(r, a) for r, a in zip(reqs, arr)]
-        if self.obs.enabled:
-            # a request ENQUEUES at its (possibly simulated) arrival — the
-            # trace timeline starts there so queue_s covers admission wait
-            for r, o, a in zip(reqs, orders, arr):
-                self._traces[o] = self.obs.trace_start(
-                    r.id, o, len(r.prompt), self.obs.rebase(t_start) + a)
-        results: Dict[int, Dict] = {}
+        orders = [self.submit(r, a) for r, a in zip(reqs, arr)]
         gate = arrival_times is not None
         with dist_ctx.activation_policy(self.mesh):
             while not self.scheduler.idle:
-                now = time.perf_counter() - t_start
-                if gate and not self.scheduler.running:
+                now = self._now()
+                if gate and not self.scheduler.running and \
+                        self.scheduler.queue:
                     # engine idle: sleep until the HEAD's arrival (admission
                     # is strictly FIFO, so the head's arrival is the binding
                     # one even when arrival times are unsorted)
-                    next_arr = self.scheduler.queue[0][2]
+                    next_arr = self.scheduler.queue[0].arrival_s
                     if next_arr > now:
                         time.sleep(next_arr - now)
-                        now = time.perf_counter() - t_start
-                admitted = self.scheduler.try_admit(
-                    now, arrived_before=now if gate else None)
-                for slot in admitted:
-                    self._prefill_slot(slot, results, t_start)
-                if self.scheduler.running:
-                    self._dispatch_decode(results, t_start)
-                elif self.scheduler.queue and not admitted:
+                        now = self._now()
+                progress = self._step(now,
+                                      arrived_before=now if gate else None)
+                if (not progress and not self.scheduler.running
+                        and self.scheduler.queue):
+                    if (gate and
+                            self.scheduler.queue[0].arrival_s > self._now()):
+                        continue            # head simply hasn't arrived yet
                     raise RuntimeError(
                         "scheduler stall: queued request cannot be admitted "
                         "into an idle engine (budget/pool too small)")
-                self.obs.tick()             # emitter rides the dispatch cadence
-        return [results[o] for o in orders]
+        return [self._results.pop(o) for o in orders]
 
-    def _prefill_slot(self, slot, results: Dict, t_start: float) -> None:
+    def _step(self, now_s: float,
+              arrived_before: Optional[float] = None) -> bool:
+        """One scheduler round between device dispatches."""
+        sched = self.scheduler
+        progress = False
+        # 1. queued deadlines
+        for entry in sched.expire_queue(now_s):
+            self._finish_unserved(entry.order, entry.request,
+                                  entry.resume_tokens, TIMEOUT,
+                                  preemptions=entry.preemptions)
+            progress = True
+        # 2. pending cancels of running slots (queued cancels resolved
+        #    inside cancel(); stale ids — already terminal — are dropped)
+        if self._cancels:
+            for slot in list(sched.running):
+                if slot.request.id in self._cancels:
+                    self._finish(slot, CANCELLED)
+                    progress = True
+            self._cancels.clear()
+        # 3. in-flight deadlines
+        for slot in list(sched.running):
+            if slot.deadline_s is not None and now_s > slot.deadline_s:
+                self._finish(slot, TIMEOUT)
+                progress = True
+        # 4. admission + prefill (recompute-prefill for preempted entries)
+        admitted = sched.try_admit(now_s, arrived_before)
+        for entry in sched.drain_doomed():   # can NEVER fit the pool
+            self._finish_unserved(entry.order, entry.request,
+                                  entry.resume_tokens, FAILED,
+                                  preemptions=entry.preemptions)
+            progress = True
+        for slot in admitted:
+            self._prefill_slot(slot)
+            progress = True
+        # 5. page growth for the next chunk; preemptions free their victim's
+        #    device state
+        prep = sched.prepare_decode(self.decode_chunk)
+        t_pre = self.obs.rebase(time.perf_counter())
+        for idx, entry in prep.preempted:
+            self._rem[idx] = 0              # victim's slot is dead on device
+            progress = True
+            if self.obs.enabled:
+                tr = self._traces.get(entry.order)
+                if tr is not None:
+                    tr.mark_preempt(t_pre, len(entry.resume_tokens))
+        # 6. decode dispatch over the slots whose pages cover the chunk
+        if admitted or prep.preempted or prep.runnable:
+            self._stall_streak = 0
+        if prep.runnable:
+            self._dispatch_decode(prep.runnable, prep.stalled)
+            progress = True
+        elif prep.stalled:
+            # every live slot is starved and no victim remains under the
+            # preemption bound.  Transient allocator faults clear on retry,
+            # so retry a bounded number of rounds; past the limit this is
+            # genuine starvation — FAIL the youngest stalled slot to free
+            # pages instead of livelocking.
+            self._stall_streak += 1
+            progress = True
+            if self._stall_streak >= self._stall_limit:
+                victim = max(prep.stalled, key=lambda s: s.order)
+                self._finish(victim, FAILED)
+                self._stall_streak = 0
+        self.obs.tick()             # emitter rides the dispatch cadence
+        return progress
+
+    def _prefill_slot(self, slot) -> None:
         t0 = time.perf_counter()
-        self._dev_table = None              # admission reserved pages
         req = slot.request
-        S = len(req.prompt)
+        # a resumed (preempted) request teacher-forces prompt + generated
+        # tokens through prefill: greedy decode then continues identically
+        prompt = list(np.asarray(req.prompt).tolist()) + list(slot.tokens)
+        S = len(prompt)
         n_pages = kvc.pages_for(S, self.page_size)
         spad = n_pages * self.page_size
         toks = np.zeros(spad, np.int32)
-        toks[:S] = req.prompt                          # right-pad
+        toks[:S] = prompt                              # right-pad
         batch = {"tokens": jnp.asarray(toks[None])}
         if self.cfg.frontend == "vision_stub":
             batch["patches"] = jnp.zeros(
                 (1, self.cfg.num_patches, self.cfg.d_model), jnp.float32)
         pages = jnp.asarray(self.block_table.pages(slot.index)[:n_pages],
                             jnp.int32)
-        nxt, self.pool = self._prefill_fn(n_pages)(
+        nxt, ok, self.pool = self._prefill_fn(n_pages)(
             self.params, batch, self.pool, pages, jnp.int32(S))
         # fence the whole dispatch (token AND page scatter) so the prefill
         # span — and the trace's first-token mark — measure device work
         jax.block_until_ready((nxt, self.pool))
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        self._ctr["prefill_s"].inc(dt)
+        self._ctr["prompt_tokens"].inc(S)
+        self._ctr["padded_prompt_tokens"].inc(spad)
+        slot.prefill_s = dt
+        if self.nan_guard and not bool(ok):
+            # poisoned prefill: never stream a garbage first token
+            self._c_anom.inc()
+            self._rem[slot.index] = 0
+            if self.obs.enabled:
+                self._h_prefill.observe(dt)
+                tr = self._traces.get(slot.order)
+                if tr is not None and tr.admit_s is None:
+                    tr.mark_admit(self.obs.rebase(self._t0_perf)
+                                  + slot.admit_s)
+            self._finish(slot, FAILED)
+            return
         first = int(nxt)
         slot.tokens.append(first)
         slot.pos = S                       # position of the token in flight
@@ -492,37 +695,54 @@ class ContinuousEngine:
         self._cur[slot.index] = first
         self._pos[slot.index] = S
         self._rem[slot.index] = slot.budget
-        t1 = time.perf_counter()
-        dt = t1 - t0
-        self._ctr["prefill_s"].inc(dt)
-        self._ctr["prompt_tokens"].inc(S)
-        self._ctr["padded_prompt_tokens"].inc(spad)
-        slot.prefill_s = dt
+        self._ctr["tokens"].inc()          # the prefill-emitted token
         if self.obs.enabled:
             self._h_prefill.observe(dt)
             tr = self._traces.get(slot.order)
             if tr is not None:
-                tr.mark_admit(self.obs.rebase(t_start) + slot.admit_s)
-                tr.mark_first_token(self.obs.rebase(t1))
+                t_first = self.obs.rebase(t1)
+                if tr.admit_s is None:     # first admission of this request
+                    tr.mark_admit(self.obs.rebase(self._t0_perf)
+                                  + slot.admit_s)
+                    tr.mark_first_token(t_first)
+                else:                      # recompute-prefill after preempt
+                    tr.mark_chunk(t_first, 1)
             if self._scales_host is not None:
                 # prefill packs fresh pages (new scales, not grow events):
                 # refresh the shadow so the next decode diff is clean
                 self._scales_host = kvc.pool_scales(self.pool)
-        if slot.budget <= 0 or (self.eos_id is not None
-                                and first == self.eos_id):
+        if (len(slot.tokens) >= slot.total_budget
+                or (self.eos_id is not None and first == self.eos_id)):
             self._rem[slot.index] = 0
-            self._finish(slot, results, t_start)
+            self._finish(slot)
+        elif slot.deadline_s is not None and self._now() > slot.deadline_s:
+            self._rem[slot.index] = 0
+            self._finish(slot, TIMEOUT)
 
-    def _dispatch_decode(self, results: Dict, t_start: float) -> None:
+    def _dispatch_decode(self, runnable, stalled) -> None:
+        if self.faults is not None:
+            delay = self.faults.dispatch_delay()
+            if delay > 0.0:
+                time.sleep(delay)          # injected control-plane hiccup
+            victim = self.faults.pick_corruption(runnable)
+            if victim is not None:
+                from .faults import poison_slot_pages
+                self.pool = poison_slot_pages(
+                    self.pool, self.block_table.pages(victim.index)[0])
         t0 = time.perf_counter()
-        running = list(self.scheduler.running)
-        rem_before = self._rem.copy()
-        if self._dev_table is None:         # tables change only on
-            self._dev_table = self.block_table.device_table()   # admit/retire
-        buf, cur, self.pool, pos, rem, done = self._loop(
+        # stalled slots (no pages for the next chunk) are masked out of
+        # this dispatch: rem=0 freezes them on device, their budget is
+        # restored afterwards so they retry next round
+        rem_dispatch = self._rem.copy()
+        for s in stalled:
+            rem_dispatch[s.index] = 0
+        if self._table_version != self.block_table.version:
+            self._dev_table = self.block_table.device_table()
+            self._table_version = self.block_table.version
+        buf, cur, self.pool, pos, rem, done, anom = self._loop(
             self.params, jnp.asarray(self._cur), self.pool,
             self._dev_table, jnp.asarray(self._pos),
-            jnp.asarray(self._rem))
+            jnp.asarray(rem_dispatch))
         # fence before the span boundary: the decode_chunk wall time (and
         # the per-chunk trace marks) measure the device program
         jax.block_until_ready(buf)
@@ -530,23 +750,28 @@ class ContinuousEngine:
         buf = np.asarray(buf)
         self._cur = np.array(cur)
         self._pos = np.array(pos)
-        self._rem = np.array(rem)
+        rem_after = np.array(rem)
         done = np.asarray(done)
+        anom = np.asarray(anom)
+        saved = {s.index: self._rem[s.index] for s in stalled}
+        self._rem = rem_after
+        for idx, v in saved.items():
+            self._rem[idx] = v
         dt = t1 - t0
         self._ctr["decode_s"].inc(dt)
         self._ctr["dispatches"].inc()
         if self.obs.enabled:
             self._h_chunk.observe(dt)
-            self._h_occup.observe(len(running) / max(self.max_slots, 1))
+            self._h_occup.observe(len(runnable) / max(self.max_slots, 1))
             if self._scales_host is not None:
                 scales = kvc.pool_scales(self.pool)
                 self._c_growths.inc(
                     int((scales > self._scales_host).sum()))
                 self._scales_host = scales
         t_chunk = self.obs.rebase(t1)
-        for slot in running:
+        for slot in runnable:
             b = slot.index
-            n = int(rem_before[b] - self._rem[b])
+            n = int(rem_dispatch[b] - rem_after[b])
             if n:
                 slot.tokens.extend(buf[b, :n].tolist())
                 slot.pos = int(self._pos[b])
@@ -559,24 +784,40 @@ class ContinuousEngine:
                     tr = self._traces.get(slot.order)
                     if tr is not None:
                         tr.mark_chunk(t_chunk, n)
-            if done[b]:
-                self._finish(slot, results, t_start)
+            if anom[b]:
+                self._c_anom.inc()
+                self._finish(slot, FAILED)
+            elif done[b]:
+                self._finish(slot)
 
-    def _finish(self, slot, results: Dict, t_start: float) -> None:
-        now = time.perf_counter() - t_start
+    # -- terminal transitions ---------------------------------------------
+    def _finish(self, slot, status: Optional[str] = None) -> None:
+        """Retire a slot-resident request.  ``status`` None infers the
+        natural finish (EOS vs budget); explicit statuses come from the
+        cancel/timeout/failure paths."""
+        if status is None:
+            toks = slot.tokens
+            status = (FINISHED_EOS
+                      if (self.eos_id is not None and toks
+                          and toks[-1] == self.eos_id)
+                      else FINISHED_BUDGET)
+        now = self._now()
         prefill_s = getattr(slot, "prefill_s", 0.0)
         arrival, admit = slot.arrival_s, slot.admit_s
         order = slot.order
-        res = self.scheduler.retire(slot)   # releases the slot's pages
-        self._dev_table = None
+        self._rem[slot.index] = 0           # device slot is dead
+        res = self.scheduler.retire(slot, status)  # releases the pages
         tr = self._traces.pop(order, None)
         if tr is not None:
             # one timeline: the result's latency fields come FROM the trace,
             # so bench percentiles over results and over traces are the same
             # numbers by construction
-            tr.mark_retire(self.obs.rebase(t_start) + now)
+            tr.status = status
+            # clamp: a cancel/timeout can land before a SIMULATED arrival
+            tr.mark_retire(max(self.obs.rebase(self._t0_perf) + now,
+                               tr.enqueue_s))
             self.obs.trace_finish(tr)
-            decode_s = tr.decode_s
+            decode_s = tr.decode_s if tr.decode_s is not None else 0.0
             res.update({
                 "tokens_per_s": res["decode_len"] / max(decode_s, 1e-9),
                 "prefill_s": tr.prefill_s,
@@ -594,8 +835,36 @@ class ContinuousEngine:
                 "latency_s": max(now - arrival, 0.0),
             })
         self._ctr["requests"].inc()
-        self._ctr["tokens"].inc()           # the prefill-emitted first token
-        results[res.pop("order")] = res
+        self._results[res.pop("order")] = res
+
+    def _finish_unserved(self, order: int, request, tokens, status: str,
+                         preemptions: int = 0) -> None:
+        """Terminal result for a request that never (re)entered a slot —
+        rejected, cancelled in queue, or expired in queue.  The scheduler
+        already bumped the terminal counter on all of these paths."""
+        now = self._now()
+        tr = self._traces.pop(order, None)
+        res = {
+            "id": request.id,
+            "tokens": list(tokens),
+            "decode_len": len(tokens),
+            "status": status,
+            "preemptions": preemptions,
+            "tokens_per_s": 0.0,
+            "prefill_s": None,
+            "decode_s": 0.0,
+            "queue_s": None,
+            "latency_s": None,
+        }
+        if tr is not None:
+            tr.status = status
+            # clamp: a cancel/reject can land before a SIMULATED arrival
+            tr.mark_retire(max(self.obs.rebase(self._t0_perf) + now,
+                               tr.enqueue_s))
+            self.obs.trace_finish(tr)
+            res["latency_s"] = tr.latency_s
+            res["queue_s"] = tr.latency_s   # never admitted: all queue wait
+        self._results[order] = res
 
     # -- telemetry --------------------------------------------------------
     def stats(self) -> Dict:
@@ -610,6 +879,7 @@ class ContinuousEngine:
         st["decode_dispatches"] = st["dispatches"]  # legacy alias
         st.update(self.scheduler.stats())
         v = self.obs.registry.value
+        st["anomalies"] = int(v("engine.anomalies"))
         st["free_pages"] = int(v("pool.free_pages"))
         st["pages_alloc"] = int(v("pool.pages_alloc"))
         st["pages_freed"] = int(v("pool.pages_freed"))

@@ -1,0 +1,331 @@
+"""Deterministic seeded fault injection + the chaos invariant suite.
+
+The paper's hardware half survives contention by construction (reconfig-
+urable fabric, hierarchical control); the serving stack has to EARN the
+same property, so this module makes failure a first-class, reproducible
+input.  ``FaultInjector`` hooks three seams of the continuous engine:
+
+* **allocator failure** (``alloc_fail_p``): ``PageAllocator.alloc``
+  consults the injector and fails as if the pool were empty — driving the
+  optimistic-admission preemption/stall paths far harder than organic
+  page pressure would;
+* **dispatch delay** (``dispatch_delay_p`` / ``dispatch_delay_s``): a
+  host-side sleep before a decode dispatch, widening the windows in which
+  deadlines expire and cancels land mid-flight;
+* **slot corruption** (``corrupt_p``): NaN-poisons the first owned page
+  of a running slot before a dispatch — the decode loop's device-side
+  NaN/Inf guard must freeze the slot and the engine must retire it
+  FAILED (never streaming garbage tokens).
+
+Everything is keyed by one ``numpy.random.RandomState(seed)``, so a chaos
+run is a pure function of (arch, seed, workload) — CI replays the same
+three seeds forever.
+
+``run_chaos`` is the invariant suite (CI `chaos` step;
+``python -m repro.serve.faults --seed N``): it drives the engine through
+the low-level submit/step/cancel API with randomized deadlines, cancels,
+and injected faults, then asserts the lifecycle invariants:
+
+1. every submitted request reaches EXACTLY ONE terminal status,
+2. the free-page count returns to its initial value (no leaks), the
+   block table is all-trash, and no tokens remain in flight,
+3. non-faulted finished requests are token-identical to the B=1 batch
+   oracle (greedy; preemption-and-recompute must be invisible), and
+   partially-served terminals (cancel/timeout) are a PREFIX of the
+   oracle's tokens.
+
+Poisoned pages are safe to recycle: prefill packs whole pages before any
+position becomes valid, decode overwrites a position before its validity
+flips, and the attention mask is ``where``-based (masked lanes drop NaN
+instead of multiplying by it).  Int8 pools carry the poison in the page
+scales instead; the chaos suite itself runs the f32 pool, where the
+oracle comparison is exact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import scheduler as sched_mod
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Knobs for one seeded injector (all probabilities per-event)."""
+    seed: int = 0
+    alloc_fail_p: float = 0.0          # per PageAllocator.alloc call
+    dispatch_delay_p: float = 0.0      # per decode dispatch
+    dispatch_delay_s: float = 0.0      # injected sleep when it fires
+    corrupt_p: float = 0.0             # per decode dispatch
+
+
+class FaultInjector:
+    """Seeded fault source the engine consults at its three seams.
+
+    Wire it with ``ContinuousEngine(..., faults=FaultInjector(cfg))`` —
+    the engine installs ``alloc_fault`` as the allocator's fault hook and
+    calls ``dispatch_delay`` / ``pick_corruption`` before each decode
+    dispatch.  ``corrupted_ids`` records which request ids were poisoned
+    (the chaos suite excludes exactly those from oracle parity).
+    """
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.rng = np.random.RandomState(cfg.seed)
+        self.alloc_failures = 0
+        self.delays = 0
+        self.corruptions = 0
+        self.corrupted_ids: set = set()
+
+    def alloc_fault(self, n: int) -> bool:
+        """PageAllocator hook: True forces this alloc to fail."""
+        if self.cfg.alloc_fail_p <= 0.0:
+            return False
+        if self.rng.random_sample() < self.cfg.alloc_fail_p:
+            self.alloc_failures += 1
+            return True
+        return False
+
+    def dispatch_delay(self) -> float:
+        """Seconds to sleep before the next decode dispatch (0 = none)."""
+        if (self.cfg.dispatch_delay_p <= 0.0
+                or self.cfg.dispatch_delay_s <= 0.0):
+            return 0.0
+        if self.rng.random_sample() < self.cfg.dispatch_delay_p:
+            self.delays += 1
+            return self.cfg.dispatch_delay_s
+        return 0.0
+
+    def pick_corruption(self, running: Sequence) -> Optional[object]:
+        """A running slot to NaN-poison before this dispatch, or None.
+        Each request is poisoned at most once (the guard retires it on the
+        very next dispatch, so a second draw would be wasted)."""
+        if self.cfg.corrupt_p <= 0.0 or not running:
+            return None
+        if self.rng.random_sample() >= self.cfg.corrupt_p:
+            return None
+        slot = running[int(self.rng.randint(len(running)))]
+        if slot.request.id in self.corrupted_ids:
+            return None
+        self.corrupted_ids.add(slot.request.id)
+        self.corruptions += 1
+        return slot
+
+    def stats(self) -> Dict:
+        return {
+            "seed": self.cfg.seed,
+            "alloc_failures": self.alloc_failures,
+            "delays": self.delays,
+            "corruptions": self.corruptions,
+            "corrupted_ids": sorted(self.corrupted_ids),
+        }
+
+
+def poison_slot_pages(pool, page: int):
+    """NaN-poison one pool page across every layer (both scan-group dims).
+
+    Float pools poison the K values; int8 pools poison the K scales (the
+    int8 payload cannot hold a NaN).  The next attention read over a live
+    position of this page produces NaN logits, which the decode loop's
+    device-side guard converts into a frozen slot + ``anom`` flag.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import kvcache as kvc
+
+    def poison(node):
+        if not kvc._is_kv_leaf(node):
+            return node
+        out = dict(node)
+        if "k_scale" in node:
+            out["k_scale"] = node["k_scale"].at[:, page].set(jnp.nan)
+        else:
+            out["k"] = node["k"].at[:, page].set(jnp.nan)
+        return out
+
+    return jax.tree_util.tree_map(poison, pool, is_leaf=kvc._is_kv_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Chaos invariant suite (CI `chaos` step; tests/test_faults.py wraps it)
+# ---------------------------------------------------------------------------
+def make_chaos_workload(n: int, *, vocab: int, seed: int,
+                        prompt_lens=(6, 10, 16), budgets=(2, 5, 9, 16),
+                        deadline_frac: float = 0.3,
+                        deadline_choices=(0.05, 0.4, 5.0)):
+    """``n`` requests with randomized prompts/budgets and a ``deadline_frac``
+    fraction carrying (sometimes very tight) deadlines.  Lengths/budgets
+    draw from small sets so the oracle's per-shape compiles stay bounded."""
+    from .engine import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        s = int(rng.choice(prompt_lens))
+        prompt = rng.randint(1, vocab, size=s).astype(np.int32)
+        dl = (float(rng.choice(deadline_choices))
+              if rng.random_sample() < deadline_frac else None)
+        reqs.append(Request(prompt=prompt, id=i,
+                            max_new_tokens=int(rng.choice(budgets)),
+                            deadline_s=dl))
+    arrivals = np.cumsum(rng.exponential(0.01, size=n)).tolist()
+    return reqs, arrivals
+
+
+def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
+              requests: int = 24, cancel_p: float = 0.08,
+              metrics_out: Optional[str] = None,
+              verbose: bool = True) -> Dict:
+    """Drive the continuous engine through randomized lifecycle chaos and
+    assert the invariants.  Returns a summary dict (raises AssertionError
+    on any violation).  Deterministic given (arch, seed, requests)."""
+    import jax
+
+    from ..configs import registry as config_registry
+    from ..models.registry import build_model
+    from ..obs import Obs
+    from .engine import ContinuousEngine, Engine
+
+    cfg = config_registry.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq = 64
+    reqs, arrivals = make_chaos_workload(requests, vocab=cfg.vocab_size,
+                                         seed=seed)
+
+    # B=1 greedy oracle per request (no deadline pressure, no faults)
+    oracle_eng = Engine(cfg, params, max_batch=1, max_seq=max_seq)
+    oracle = {r.id: oracle_eng.generate(
+        [dataclasses.replace(r, deadline_s=None)])[0]["tokens"]
+        for r in reqs}
+
+    faults = FaultInjector(FaultConfig(
+        seed=seed, alloc_fail_p=0.05, dispatch_delay_p=0.1,
+        dispatch_delay_s=0.002, corrupt_p=0.08))
+    obs = (Obs(emit_path=metrics_out, emit_every=5)
+           if metrics_out else Obs())
+    # a small pool (half the slots' full-grown footprint) forces organic
+    # page pressure on top of the injected allocator failures
+    eng = ContinuousEngine(
+        cfg, params, max_slots=4, max_seq=max_seq, page_size=8,
+        num_pages=9, decode_chunk=4, obs=obs,
+        admission="optimistic", max_queue=requests, max_preemptions=4,
+        faults=faults)
+    allocator = eng.block_table.allocator
+    free0 = allocator.available
+
+    rng = np.random.RandomState(seed + 1)
+    orders = {}
+    events = 0
+    for r, a in zip(reqs, arrivals):
+        orders[r.id] = eng.submit(r, a)
+        events += 1
+    live = set(orders)
+    steps = 0
+    while not eng.scheduler.idle:
+        steps += 1
+        if not eng.step():
+            time.sleep(0.001)          # head of queue hasn't arrived yet
+        events += 1
+        # randomized cancels against whatever is still live
+        live = {i for i in live if eng.result(orders[i]) is None}
+        if live and rng.random_sample() < cancel_p:
+            target = int(rng.choice(sorted(live)))
+            if eng.cancel(target):
+                events += 1
+        if steps > 50_000:
+            raise AssertionError("chaos run did not converge")
+    eng.drain()
+
+    # -- invariant 1: exactly one terminal state per request --------------
+    results = {i: eng.result(o) for i, o in orders.items()}
+    missing = [i for i, res in results.items() if res is None]
+    assert not missing, f"requests with no terminal result: {missing}"
+    statuses = {i: res["status"] for i, res in results.items()}
+    bad = {i: s for i, s in statuses.items()
+           if s not in sched_mod.TERMINAL_STATUSES}
+    assert not bad, f"non-terminal statuses: {bad}"
+    term_counts = eng.scheduler.terminal_counts()
+    assert sum(term_counts.values()) == len(reqs), (
+        f"terminal transitions {term_counts} != {len(reqs)} requests "
+        f"(a request went terminal twice or never)")
+
+    # -- invariant 2: no page leaks ---------------------------------------
+    assert allocator.available == free0, (
+        f"page leak: {free0 - allocator.available} pages missing")
+    assert allocator.in_use == 0
+    assert (eng.block_table.table == 0).all(), "block table not all-trash"
+    assert eng.scheduler.tokens_in_flight == 0
+
+    # -- invariant 3: oracle parity for non-faulted requests --------------
+    corrupted = faults.corrupted_ids
+    mismatches = []
+    for r in reqs:
+        res = results[r.id]
+        if r.id in corrupted:
+            if res["status"] in sched_mod.FINISHED_STATUSES:
+                mismatches.append((r.id, "corrupted request FINISHED"))
+            continue
+        want = oracle[r.id]
+        got = res["tokens"]
+        if res["status"] in sched_mod.FINISHED_STATUSES:
+            if got != want:
+                mismatches.append((r.id, f"tokens {got} != oracle {want}"))
+        elif got and got != want[:len(got)]:
+            # cancelled/timed-out mid-flight: whatever was produced must
+            # still be an oracle prefix (recompute never forks the stream)
+            mismatches.append((r.id, f"prefix {got} != oracle {want}"))
+    assert not mismatches, f"oracle divergence: {mismatches}"
+
+    if metrics_out:
+        from ..obs.emit import validate_jsonl
+        validate_jsonl(metrics_out)
+
+    summary = {
+        "arch": arch,
+        "seed": seed,
+        "requests": len(reqs),
+        "events": events,
+        "steps": steps,
+        "statuses": term_counts,
+        "preemptions": eng.scheduler.preempted,
+        "anomalies": eng.stats()["anomalies"],
+        "faults": faults.stats(),
+    }
+    if verbose:
+        print(f"[chaos] seed={seed} arch={arch}: OK — "
+              f"{len(reqs)} requests, {events} events, "
+              f"statuses={term_counts}, "
+              f"preemptions={summary['preemptions']}, "
+              f"anomalies={summary['anomalies']}, "
+              f"faults={faults.stats()}")
+    return summary
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Chaos invariant suite for the continuous engine "
+                    "(seeded fault injection; CI `chaos` step).")
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--metrics-out", default=None,
+                    help="also emit obs JSONL and validate it")
+    args = ap.parse_args(argv)
+    try:
+        run_chaos(arch=args.arch, seed=args.seed, requests=args.requests,
+                  metrics_out=args.metrics_out)
+    except AssertionError as e:
+        print(f"[chaos] FAILED: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

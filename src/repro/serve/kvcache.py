@@ -48,7 +48,15 @@ class PageAllocator:
     """LIFO free-list over ``num_pages`` pages; page 0 (trash) is reserved.
 
     ``alloc`` returns None instead of raising when the pool is exhausted —
-    the scheduler treats that as "request stays queued".
+    the scheduler treats that as "request stays queued" (or, under
+    optimistic admission, as a preemption trigger).  ``fault`` is an
+    optional hook (``fault(n) -> bool``; see serve/faults.py): when it
+    returns True an alloc is forced to fail as if the pool were empty —
+    the chaos suite drives the preemption/stall paths with it.
+
+    ``free`` raises on a double free, on a page the allocator never
+    handed out, and on the reserved trash page — all three silently
+    corrupt the free list otherwise (a page ends up owned by two slots).
 
     With a metrics ``registry`` (repro.obs) the allocator keeps the
     ``pool.free_pages`` gauge and the ``pool.pages_alloc`` /
@@ -56,12 +64,13 @@ class PageAllocator:
     over-time view of what ``in_use`` reports point-in-time.
     """
 
-    def __init__(self, num_pages: int, registry=None):
+    def __init__(self, num_pages: int, registry=None, fault=None):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is the trash)")
         self.num_pages = int(num_pages)
         self._free = list(range(self.num_pages - 1, 0, -1))
         self._held: set = set()
+        self.fault = fault
         self._free_gauge = self._alloc_ctr = self._freed_ctr = None
         if registry is not None:
             self._free_gauge = registry.gauge("pool.free_pages")
@@ -82,6 +91,8 @@ class PageAllocator:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
+        if self.fault is not None and self.fault(n):
+            return None                    # injected failure: as-if empty
         pages = [self._free.pop() for _ in range(n)]
         self._held.update(pages)
         if self._alloc_ctr is not None:
@@ -91,8 +102,14 @@ class PageAllocator:
 
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("freeing the reserved trash page "
+                                 f"{TRASH_PAGE}")
             if p not in self._held:
-                raise ValueError(f"double free / foreign page {p}")
+                if 0 < p < self.num_pages:
+                    raise ValueError(f"double free of page {p}")
+                raise ValueError(f"foreign page {p} (allocator holds "
+                                 f"1..{self.num_pages - 1})")
             self._held.discard(p)
             self._free.append(p)
         if self._freed_ctr is not None:
@@ -106,7 +123,13 @@ class BlockTable:
     Rows are dense ``(max_slots, max_pages_per_slot)`` int32 (device-ready);
     unowned entries hold TRASH_PAGE.  ``reserve`` grows a slot's mapping to
     cover ``n_positions`` cache slots (False = pool exhausted, nothing
-    changes); ``release`` returns every page of a slot to the free list.
+    changes); ``release`` returns every page of a slot to the free list and
+    is IDEMPOTENT (releasing an already-released slot is a no-op — the
+    engine's cancel/timeout/preempt paths may race a natural retire).
+
+    ``version`` increments on every mutation that changes the dense table
+    (page growth, release) — the engine re-uploads its device copy only
+    when the version moved, instead of hand-invalidating a cached array.
     """
 
     def __init__(self, allocator: PageAllocator, max_slots: int,
@@ -117,6 +140,7 @@ class BlockTable:
         self.table = np.full((max_slots, max_pages_per_slot), TRASH_PAGE,
                              np.int32)
         self.owned: List[List[int]] = [[] for _ in range(max_slots)]
+        self.version = 0
 
     def reserve(self, slot: int, n_positions: int) -> bool:
         need = pages_for(n_positions, self.page_size)
@@ -133,13 +157,16 @@ class BlockTable:
         start = len(self.owned[slot])
         self.owned[slot].extend(pages)
         self.table[slot, start:start + extra] = pages
+        self.version += 1
         return True
 
     def release(self, slot: int) -> None:
-        if self.owned[slot]:
-            self.allocator.free(self.owned[slot])
+        if not self.owned[slot]:
+            return                          # idempotent: already released
+        self.allocator.free(self.owned[slot])
         self.owned[slot] = []
         self.table[slot, :] = TRASH_PAGE
+        self.version += 1
 
     def pages(self, slot: int) -> List[int]:
         return list(self.owned[slot])

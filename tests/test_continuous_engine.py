@@ -171,6 +171,98 @@ def test_telemetry(tiny_setup):
     assert st["prompt_pad_waste"] >= 0
 
 
+def test_result_status_fields(tiny_setup):
+    cfg, params = tiny_setup
+    reqs = _reqs([(16, 12), (12, 12)])
+    ref = Engine(cfg, params, max_batch=1, max_seq=32)
+    eos = ref.generate([reqs[0]])[0]["tokens"][3]
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=4,
+                           eos_id=eos)
+    got = eng.generate(reqs)
+    assert got[0]["status"] == "FINISHED_EOS"
+    statuses = {g["status"] for g in got}
+    assert statuses <= {"FINISHED_EOS", "FINISHED_BUDGET"}
+    assert all(g["preemptions"] == 0 for g in got)
+
+
+def test_preemption_parity_small_pool(tiny_setup):
+    """Optimistic admission over an undersized pool: decode-time growth
+    preempts, preempted requests recompute-prefill — and every request's
+    greedy tokens still equal its B=1 oracle run."""
+    cfg, params = tiny_setup
+    reqs = _reqs([(16, 12), (14, 12), (15, 10)])
+    oracle = Engine(cfg, params, max_batch=1, max_seq=32)
+    want = [oracle.generate([r])[0]["tokens"] for r in reqs]
+    # 8 usable pages: two 4-page prefills fill the pool; first growth must
+    # preempt the younger slot (worst case is 7 pages each)
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=4,
+                           num_pages=9, decode_chunk=4)
+    got = eng.generate(reqs)
+    assert [g["tokens"] for g in got] == want
+    st = eng.stats()
+    assert st["preempted"] > 0
+    assert any(g["preemptions"] > 0 for g in got)
+    assert st["pages_in_use"] == 0 and st["tokens_in_flight"] == 0
+    assert sum(st["statuses"].values()) == len(reqs)
+
+
+def test_deadline_expires_in_queue(tiny_setup):
+    cfg, params = tiny_setup
+    reqs = _reqs([(12, 10), (12, 10)])
+    reqs[1] = dataclasses.replace(reqs[1], deadline_s=1e-4)
+    eng = ContinuousEngine(cfg, params, max_slots=1, max_seq=32, page_size=4)
+    out = eng.generate(reqs)
+    assert out[0]["status"] == "FINISHED_BUDGET"
+    assert out[1]["status"] == "TIMEOUT" and out[1]["decode_len"] == 0
+    assert eng.stats()["pages_in_use"] == 0
+
+
+def test_deadline_expires_in_flight(tiny_setup):
+    cfg, params = tiny_setup
+    reqs = _reqs([(12, 20)])
+    reqs[0] = dataclasses.replace(reqs[0], deadline_s=0.05)
+    eng = ContinuousEngine(cfg, params, max_slots=1, max_seq=32, page_size=4,
+                           decode_chunk=1)
+    out = eng.generate(reqs)                # compile alone blows the budget
+    assert out[0]["status"] == "TIMEOUT"
+    assert out[0]["decode_len"] < 20
+    assert eng.stats()["pages_in_use"] == 0
+
+
+def test_cancel_and_drain(tiny_setup):
+    cfg, params = tiny_setup
+    reqs = _reqs([(12, 8), (12, 8), (12, 8)])
+    eng = ContinuousEngine(cfg, params, max_slots=1, max_seq=32, page_size=4,
+                           decode_chunk=1)
+    orders = [eng.submit(r) for r in reqs]
+    eng.step()                              # admits + prefills request 0
+    assert eng.cancel(reqs[1].id)           # still queued: result now
+    assert eng.result(orders[1])["status"] == "CANCELLED"
+    assert eng.cancel(reqs[0].id)           # running: retired next boundary
+    assert not eng.cancel(999)              # unknown id
+    eng.drain()                             # sheds request 2 as REJECTED
+    assert eng.result(orders[0])["status"] == "CANCELLED"
+    assert eng.result(orders[2])["status"] == "REJECTED"
+    st = eng.stats()
+    assert st["pages_in_use"] == 0 and st["queue_depth"] == 0
+    assert sum(st["statuses"].values()) == 3
+
+
+def test_bounded_queue_rejects_at_submit(tiny_setup):
+    cfg, params = tiny_setup
+    reqs = _reqs([(12, 4), (12, 4)])
+    eng = ContinuousEngine(cfg, params, max_slots=1, max_seq=32, page_size=4,
+                           max_queue=1)
+    o0 = eng.submit(reqs[0])
+    o1 = eng.submit(reqs[1])                # queue full (nothing stepped yet)
+    assert eng.result(o1)["status"] == "REJECTED"
+    while eng.step():                       # request 0 runs to completion
+        pass
+    eng.drain()
+    assert eng.result(o0)["status"] == "FINISHED_BUDGET"
+    assert eng.stats()["queue_depth"] == 0
+
+
 def test_sampling_reproducible_and_seed_distinct(tiny_setup):
     cfg, params = tiny_setup
     reqs = _reqs([(12, 12), (16, 12)])

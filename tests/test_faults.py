@@ -1,0 +1,120 @@
+"""Fault-injection harness: deterministic seeding, the chaos invariant
+suite (every request exactly one terminal status, no page leaks, oracle
+token identity for non-faulted requests), and the optimistic-admission
+concurrency win over worst-case reservation."""
+import numpy as np
+
+from repro.serve import kvcache as kvc
+from repro.serve.engine import Request
+from repro.serve.faults import (FaultConfig, FaultInjector,
+                                make_chaos_workload, run_chaos)
+from repro.serve.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# Injector determinism
+# ---------------------------------------------------------------------------
+def test_fault_injector_deterministic():
+    def roll(seed):
+        inj = FaultInjector(FaultConfig(seed=seed, alloc_fail_p=0.3,
+                                        dispatch_delay_p=0.3, corrupt_p=0.5))
+        allocs = [inj.alloc_fault(2) for _ in range(50)]
+        delays = [inj.dispatch_delay() for _ in range(50)]
+        return allocs, delays, inj.stats()
+
+    assert roll(3) == roll(3)
+    assert roll(3) != roll(4)
+    allocs, _, st = roll(3)
+    assert st["alloc_failures"] == sum(allocs) > 0
+
+
+def test_fault_injector_corrupts_each_request_once():
+    inj = FaultInjector(FaultConfig(seed=0, corrupt_p=1.0))
+
+    class _Slot:
+        def __init__(self, rid):
+            self.request = Request(prompt=np.array([1], np.int32),
+                                   max_new_tokens=1, id=rid)
+
+    s0, s1 = _Slot(0), _Slot(1)
+    first = inj.pick_corruption([s0, s1])
+    assert first in (s0, s1)
+    assert inj.pick_corruption([first]) is None     # once per request id
+    other = s1 if first is s0 else s0
+    assert inj.pick_corruption([other]) is other
+    assert sorted(inj.stats()["corrupted_ids"]) == [0, 1]
+
+
+def test_chaos_workload_deterministic():
+    reqs_a, arr_a = make_chaos_workload(12, vocab=500, seed=5)
+    reqs_b, arr_b = make_chaos_workload(12, vocab=500, seed=5)
+    assert len(reqs_a) == len(arr_a) == 12
+    assert arr_a == arr_b and arr_a == sorted(arr_a)
+    for ra, rb in zip(reqs_a, reqs_b):
+        assert ra.id == rb.id and ra.max_new_tokens == rb.max_new_tokens
+        assert ra.deadline_s == rb.deadline_s
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+
+
+# ---------------------------------------------------------------------------
+# Optimistic admission vs worst-case reservation (host-only virtual clock)
+# ---------------------------------------------------------------------------
+def _drive(admission, *, n=30, seed=0):
+    """Oversubscribed Poisson traffic through a scheduler whose pool holds
+    two worst-case requests; returns (mean concurrent slots per dispatch,
+    terminal counts).  Decode is emulated (no device)."""
+    rng = np.random.RandomState(seed)
+    page, maxp, slots = 4, 8, 6
+    num_pages = 17                          # 16 usable = 2 worst-case reqs
+    table = kvc.BlockTable(kvc.PageAllocator(num_pages), slots, page, maxp)
+    sched = Scheduler(table, max_seq=page * maxp,
+                      max_tokens_in_flight=slots * (page * maxp + 1),
+                      admission=admission, max_preemptions=1000)
+    arrivals = np.cumsum(rng.exponential(0.05, size=n))
+    for i, t in enumerate(arrivals):
+        # 1-page prompt, 7-page worst case: optimism has room to win
+        r = Request(prompt=np.arange(4, dtype=np.int32) + 1,
+                    max_new_tokens=25, id=i)
+        sched.submit(r, arrival_s=float(t))
+    now, samples, guard = 0.0, [], 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 100_000, "virtual clock did not converge"
+        now += 0.05
+        admitted = sched.try_admit(now, arrived_before=now)
+        assert not sched.drain_doomed()     # every request fits the pool
+        for slot in admitted:
+            slot.tokens.append(7)
+        prep = sched.prepare_decode(2)
+        assert not prep.stalled             # bound is effectively infinite
+        samples.append(len(prep.runnable))
+        for slot in prep.runnable:
+            emit = min(2, slot.total_budget - len(slot.tokens))
+            slot.tokens.extend([7] * emit)
+            if len(slot.tokens) >= slot.total_budget:
+                sched.retire(slot)
+    assert table.allocator.in_use == 0
+    conc = float(np.mean([s for s in samples if s > 0]))
+    return conc, sched.terminal_counts()
+
+
+def test_optimistic_sustains_more_concurrency_zero_lost():
+    opt, opt_counts = _drive("optimistic")
+    res, res_counts = _drive("reserve")
+    # zero lost requests under either policy
+    assert opt_counts["FINISHED_BUDGET"] == 30
+    assert sum(opt_counts.values()) == 30
+    assert res_counts["FINISHED_BUDGET"] == 30
+    assert sum(res_counts.values()) == 30
+    # the acceptance bar: >= 1.2x mean concurrent slots at equal pool size
+    assert opt >= 1.2 * res, (opt, res)
+
+
+# ---------------------------------------------------------------------------
+# Chaos invariant suite (device-backed; CI runs 3 seeds via __main__)
+# ---------------------------------------------------------------------------
+def test_chaos_suite_smoke(tmp_path):
+    out = str(tmp_path / "chaos.jsonl")
+    summary = run_chaos(seed=0, requests=10, metrics_out=out, verbose=False)
+    assert summary["requests"] == 10
+    assert sum(summary["statuses"].values()) == 10

@@ -37,6 +37,33 @@ def test_allocator_basics():
         a.free(pages)                       # double free
 
 
+def test_allocator_free_rejects_corruption():
+    a = kvc.PageAllocator(8)
+    pages = a.alloc(2)
+    with pytest.raises(ValueError, match="trash page"):
+        a.free([kvc.TRASH_PAGE])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([pages[0], pages[0]])            # second hit within one call
+    with pytest.raises(ValueError, match="foreign page"):
+        a.free([99])
+    with pytest.raises(ValueError, match="foreign page"):
+        a.free([-1])
+
+
+def test_allocator_fault_hook_fails_alloc():
+    calls = []
+
+    def fault(n):
+        calls.append(n)
+        return len(calls) == 1                  # first alloc only
+
+    a = kvc.PageAllocator(8, fault=fault)
+    assert a.alloc(2) is None                   # injected failure
+    assert a.available == 7 and a.in_use == 0   # state untouched
+    assert a.alloc(2) is not None
+    assert calls == [2, 2]
+
+
 def _allocator_schedule(num_pages, sizes):
     """No page is ever held twice; free fully restores the pool."""
     a = kvc.PageAllocator(num_pages)
@@ -96,6 +123,36 @@ def test_block_table_reserve_release():
     t.release(1)
     assert a.available == 7
     assert (t.table == kvc.TRASH_PAGE).all()
+
+
+def test_block_table_release_idempotent():
+    a = kvc.PageAllocator(8)
+    t = kvc.BlockTable(a, max_slots=2, page_size=4, max_pages_per_slot=4)
+    t.reserve(0, 9)
+    t.release(0)
+    assert a.available == 7
+    t.release(0)                                # second release: no-op
+    t.release(1)                                # never-reserved slot: no-op
+    assert a.available == 7 and a.in_use == 0
+
+
+def test_block_table_version_tracks_mutations():
+    a = kvc.PageAllocator(8)
+    t = kvc.BlockTable(a, max_slots=2, page_size=4, max_pages_per_slot=4)
+    v0 = t.version
+    assert t.reserve(0, 9)                      # grows: version moves
+    v1 = t.version
+    assert v1 > v0
+    assert t.reserve(0, 5)                      # no growth: version still
+    assert t.version == v1
+    assert t.reserve(1, 16)
+    assert not t.reserve(0, 16)                 # failed reserve: no change
+    v2 = t.version
+    t.release(0)
+    assert t.version > v2
+    v3 = t.version
+    t.release(0)                                # idempotent: version still
+    assert t.version == v3
 
 
 def test_block_table_overflow_raises():

@@ -212,6 +212,42 @@ def test_trace_store_lifecycle():
     assert s.drain_pending() == []         # drained
 
 
+def test_trace_unserved_status_relaxes_required_marks():
+    # a request cancelled in queue never admits: enqueue + retire suffice
+    tr = RequestTrace(id=0, order=0, prompt_len=4, enqueue_s=1.0)
+    tr.status = "CANCELLED"
+    tr.mark_retire(1.5)
+    tr.validate()
+    assert tr.queue_s is None and tr.latency_s == pytest.approx(0.5)
+    d = tr.to_dict()
+    assert d["status"] == "CANCELLED" and d["admit_s"] is None
+    validate_line({"type": "trace", "t_s": 0.0, **d})
+    # a SERVED trace still needs the full timeline
+    tr2 = RequestTrace(id=1, order=1, prompt_len=4, enqueue_s=1.0)
+    tr2.status = "FINISHED_EOS"
+    tr2.mark_retire(1.5)
+    with pytest.raises(ValueError):
+        tr2.validate()
+    with pytest.raises(ValueError):
+        validate_line({"type": "trace", "t_s": 0.0, **tr2.to_dict()})
+
+
+def test_trace_preemptions_recorded():
+    tr = _mk_trace()
+    tr.mark_preempt(0.7, 3)
+    tr.mark_preempt(0.9, 5)
+    d = tr.to_dict()
+    assert d["preemptions"] == [[0.7, 3], [0.9, 5]]
+    validate_line({"type": "trace", "t_s": 0.0, **d})
+
+
+def test_validate_line_rejects_unknown_status():
+    d = _mk_trace().to_dict()
+    d["status"] = "DONEISH"
+    with pytest.raises(ValueError, match="unknown status"):
+        validate_line({"type": "trace", "t_s": 0.0, **d})
+
+
 # ---------------------------------------------------------------------------
 # Emitter
 # ---------------------------------------------------------------------------

@@ -16,11 +16,12 @@ except ImportError:                                    # pragma: no cover
 
 
 def make_sched(*, slots=4, page=4, maxp=8, num_pages=None, max_seq=32,
-               budget=None):
+               budget=None, **kw):
     num_pages = num_pages if num_pages is not None else slots * maxp + 1
     table = kvc.BlockTable(kvc.PageAllocator(num_pages), slots, page, maxp)
     return Scheduler(table, max_seq=max_seq,
-                     max_tokens_in_flight=budget or slots * (max_seq + 1))
+                     max_tokens_in_flight=budget or slots * (max_seq + 1),
+                     **kw)
 
 
 def req(s, new, rid=0):
@@ -59,7 +60,10 @@ def test_token_budget_gates_admission():
 
 def test_page_exhaustion_blocks_head_without_skipping():
     # 5 usable pages, page_size 4: a 17-position request needs 5 pages
-    sched = make_sched(slots=2, page=4, maxp=5, num_pages=6, max_seq=20)
+    # (worst-case reservation policy — optimistic would admit the second
+    # request into the page the first didn't reserve up front)
+    sched = make_sched(slots=2, page=4, maxp=5, num_pages=6, max_seq=20,
+                       admission="reserve")
     sched.submit(req(16, 2, rid=0))         # 16 prompt + 1 -> 17 pos, 5 pages
     sched.submit(req(4, 2, rid=1))          # would fit 1 page — must NOT skip
     admitted = sched.try_admit()
@@ -100,6 +104,155 @@ def test_stats_shape():
                 "admitted", "retired", "peak_tokens_in_flight"):
         assert key in st
     assert st["running"] == 1 and st["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: rejection, deadlines, cancel, drain
+# ---------------------------------------------------------------------------
+def test_bounded_queue_rejects_with_backpressure():
+    sched = make_sched(max_queue=2)
+    assert sched.submit(req(4, 2, rid=0)) == (0, True)
+    assert sched.submit(req(4, 2, rid=1)) == (1, True)
+    order, accepted = sched.submit(req(4, 2, rid=2))
+    assert order == 2 and not accepted          # full: rejected, order unique
+    assert sched.terminal_counts()["REJECTED"] == 1
+    assert sched.queue_depth == 2
+
+
+def test_close_intake_rejects_and_flush_sheds_fresh_only():
+    sched = make_sched(slots=1)
+    sched.submit(req(4, 8, rid=0))
+    slot = sched.try_admit()[0]
+    slot.tokens.extend([7, 7])
+    entry = sched.preempt(slot)                 # resume entry at queue head
+    sched.submit(req(4, 2, rid=1))              # fresh entry behind it
+    sched.close_intake()
+    assert sched.submit(req(4, 2, rid=2)) == (2, False)
+    dropped = sched.flush_queue()
+    assert [e.request.id for e in dropped] == [1]
+    assert [e.request.id for e in sched.queue] == [0]   # resume survives
+    assert entry.resume_tokens == [7, 7]
+    assert sched.terminal_counts()["REJECTED"] == 2
+
+
+def test_expire_queue_times_out_by_absolute_deadline():
+    sched = make_sched()
+    r = req(4, 2, rid=0)
+    r.deadline_s = 1.0
+    sched.submit(r, arrival_s=2.0)              # absolute deadline = 3.0
+    sched.submit(req(4, 2, rid=1))              # no deadline: never expires
+    assert not sched.expire_queue(2.5)
+    expired = sched.expire_queue(3.5)
+    assert [e.request.id for e in expired] == [0]
+    assert sched.terminal_counts()["TIMEOUT"] == 1
+    assert sched.queue_depth == 1
+
+
+def test_cancel_queued_and_running():
+    sched = make_sched(slots=1)
+    sched.submit(req(4, 4, rid=0))
+    sched.submit(req(4, 4, rid=1))
+    sched.try_admit()
+    where, slot = sched.cancel(0)
+    assert where == "running" and slot.request.id == 0
+    assert not slot.free                        # caller retires at boundary
+    where, entry = sched.cancel(1)
+    assert where == "queued" and entry.request.id == 1
+    assert sched.queue_depth == 0
+    assert sched.terminal_counts()["CANCELLED"] == 1
+    assert sched.cancel(7) is None
+
+
+def test_retire_rejects_unknown_status():
+    sched = make_sched()
+    sched.submit(req(4, 2))
+    slot = sched.try_admit()[0]
+    with pytest.raises(ValueError, match="terminal status"):
+        sched.retire(slot, status="DONEISH")
+
+
+# ---------------------------------------------------------------------------
+# Optimistic admission + preemption
+# ---------------------------------------------------------------------------
+def test_optimistic_admits_where_reserve_defers():
+    # 5 usable pages, page 4: a 16-prompt request prefills into 4 pages but
+    # its worst case is 5 — reserve admits it alone, optimistic fits a
+    # 1-page neighbour beside it.
+    kw = dict(slots=2, page=4, maxp=5, num_pages=6, max_seq=20)
+    opt = make_sched(admission="optimistic", **kw)
+    opt.submit(req(16, 2, rid=0))               # spad 16 -> 4 pages (worst 5)
+    opt.submit(req(4, 2, rid=1))                # spad 4 -> 1 page
+    assert [s.request.id for s in opt.try_admit()] == [0, 1]
+    res = make_sched(admission="reserve", **kw)
+    res.submit(req(16, 2, rid=0))
+    res.submit(req(4, 2, rid=1))
+    assert [s.request.id for s in res.try_admit()] == [0]
+
+
+def test_prepare_decode_preempts_youngest_on_page_pressure():
+    # 4 usable pages, page 2: both slots prefill into 2 pages each (pool
+    # full); first growth step must evict the younger slot.
+    sched = make_sched(slots=2, page=2, maxp=5, num_pages=5, max_seq=10)
+    sched.submit(req(4, 5, rid=0))
+    sched.submit(req(4, 5, rid=1))
+    s0, s1 = sched.try_admit()
+    for slot in (s0, s1):
+        slot.tokens.append(7)                   # engine: prefill's first token
+    prep = sched.prepare_decode(chunk=4)
+    assert [s.request.id for s in prep.runnable] == [0]
+    assert [(i, e.request.id) for i, e in prep.preempted] == [(s1.index, 1)]
+    assert not prep.stalled
+    entry = prep.preempted[0][1]
+    assert entry.resume_tokens == [7] and entry.preemptions == 1
+    assert sched.queue[0] is entry              # re-queued at the head
+    # the resumed entry's footprint never inflates
+    s, steps, spad, worst = sched._plan(entry)
+    assert s == 5 and steps == 4 and worst == 8
+
+
+def test_preemption_bound_stalls_instead_of_thrashing():
+    sched = make_sched(slots=2, page=2, maxp=5, num_pages=5, max_seq=10,
+                       max_preemptions=0)
+    sched.submit(req(4, 5, rid=0))
+    sched.submit(req(4, 5, rid=1))
+    for slot in sched.try_admit():
+        slot.tokens.append(7)
+    prep = sched.prepare_decode(chunk=4)
+    assert not prep.preempted                   # nobody is evictable
+    assert [s.request.id for s in prep.stalled] == [0, 1]
+    assert sched.stats()["stalled"] == 2
+
+
+def test_doomed_entry_fails_instead_of_deferring_forever():
+    # 2 usable pages, page 2: a worst-case-8-position request can NEVER
+    # fit — admission fails it (liveness) rather than parking it forever
+    sched = make_sched(slots=1, page=2, maxp=5, num_pages=3, max_seq=10)
+    sched.submit(req(4, 5, rid=0))
+    sched.submit(req(2, 1, rid=1))              # fits: must not be blocked
+    admitted = sched.try_admit()
+    assert [s.request.id for s in admitted] == [1]
+    doomed = sched.drain_doomed()
+    assert [e.request.id for e in doomed] == [0]
+    assert sched.terminal_counts()["FAILED"] == 1
+    assert not sched.drain_doomed()             # drained once
+
+
+def test_self_preemption_when_alone():
+    # one slot, pool large enough, but a transient alloc fault (the chaos
+    # harness's injection point) hits its growth: it evicts itself
+    faults = iter([False, True])                # admit ok, first growth fails
+    table = kvc.BlockTable(
+        kvc.PageAllocator(6, fault=lambda n: next(faults, False)),
+        max_slots=1, page_size=2, max_pages_per_slot=5)
+    sched = Scheduler(table, max_seq=10, max_tokens_in_flight=11)
+    sched.submit(req(4, 5, rid=0))
+    (slot,) = sched.try_admit()
+    slot.tokens.append(7)
+    prep = sched.prepare_decode(chunk=4)
+    assert not prep.runnable and not prep.stalled
+    assert [(i, e.request.id) for i, e in prep.preempted] == [(0, 0)]
+    assert sched.queue[0].resume_tokens == [7]
+    assert sched.table.allocator.in_use == 0
 
 
 # ---------------------------------------------------------------------------
@@ -182,3 +335,157 @@ if HAVE_HYPOTHESIS:
         chunk = data.draw(st.integers(1, 8))
         _run_schedule(slots, page, maxp, max_seq, slots * (max_seq + 1),
                       reqs, lambda slot: chunk)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle state machine: every request reaches exactly one terminal
+# status; the pool is fully restored — under random interleavings of
+# submit / admit / cancel / deadline-expiry / preempt / decode / retire.
+# ---------------------------------------------------------------------------
+def _lifecycle_machine(draw, slots, page, maxp, n_requests, n_events):
+    """``draw(lo, hi)`` -> int in [lo, hi] (rng- or hypothesis-backed)."""
+    num_pages = max(2, slots * maxp // 2 + 1)   # undersized: organic pressure
+    max_seq = page * maxp
+    table = kvc.BlockTable(kvc.PageAllocator(num_pages), slots, page, maxp)
+    sched = Scheduler(table, max_seq=max_seq,
+                      max_tokens_in_flight=slots * (max_seq + 1),
+                      max_queue=n_requests, max_preemptions=3)
+    free0 = table.allocator.available
+    terminal = {}                               # order -> status (driver view)
+
+    def settle(order, status):
+        assert order not in terminal, \
+            f"order {order} terminal twice: {terminal[order]} then {status}"
+        terminal[order] = status
+
+    now = [0.0]
+    next_rid = [0]
+
+    def do_submit():
+        if next_rid[0] >= n_requests:
+            return
+        rid = next_rid[0]
+        next_rid[0] += 1
+        r = req(draw(1, max(1, max_seq // 2)), draw(1, 12), rid=rid)
+        if draw(0, 3) == 0:
+            r.deadline_s = draw(1, 5) / 10.0
+        order, accepted = sched.submit(r, arrival_s=now[0])
+        if not accepted:
+            settle(order, "REJECTED")
+
+    def do_cancel():
+        rid = draw(0, n_requests - 1)
+        hit = sched.cancel(rid)
+        if hit is None:
+            return
+        where, obj = hit
+        if where == "queued":
+            settle(obj.order, "CANCELLED")
+        else:
+            settle(sched.retire(obj, status="CANCELLED")["order"],
+                   "CANCELLED")
+
+    def do_tick():
+        now[0] += draw(0, 3) / 10.0
+        for e in sched.expire_queue(now[0]):
+            settle(e.order, "TIMEOUT")
+        for slot in list(sched.running):
+            if slot.deadline_s is not None and now[0] > slot.deadline_s:
+                settle(sched.retire(slot, status="TIMEOUT")["order"],
+                       "TIMEOUT")
+
+    def do_decode():
+        admitted = sched.try_admit(now[0], arrived_before=now[0])
+        for e in sched.drain_doomed():
+            settle(e.order, "FAILED")
+        for slot in admitted:
+            slot.tokens.append(7)               # prefill's first token
+            if len(slot.tokens) >= slot.total_budget:
+                settle(sched.retire(slot)["order"], "FINISHED_BUDGET")
+        chunk = draw(1, 6)
+        prep = sched.prepare_decode(chunk)
+        for slot in prep.runnable:
+            emit = min(chunk, slot.total_budget - len(slot.tokens))
+            slot.tokens.extend([7] * emit)
+            if len(slot.tokens) >= slot.total_budget:
+                settle(sched.retire(slot)["order"], "FINISHED_BUDGET")
+
+    actions = (do_submit, do_submit, do_decode, do_decode, do_tick,
+               do_cancel)
+    for _ in range(n_events):
+        actions[draw(0, len(actions) - 1)]()
+        # mid-run invariants: slot/page consistency
+        owned = [set(table.pages(s.index)) for s in sched.running]
+        for i in range(len(owned)):
+            for j in range(i + 1, len(owned)):
+                assert not owned[i] & owned[j]
+        assert sched.tokens_in_flight <= sched.max_tokens_in_flight
+
+    # drain: shed the queue, then run whatever is resident to completion
+    while next_rid[0] < n_requests:
+        do_submit()
+    sched.close_intake()
+    for e in sched.flush_queue():
+        settle(e.order, "REJECTED")
+    guard = 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 10_000, "drain did not converge"
+        if not sched.running and sched.queue:   # resume entries only
+            admitted = sched.try_admit(now[0])
+            for e in sched.drain_doomed():
+                settle(e.order, "FAILED")
+            for slot in admitted:
+                slot.tokens.append(7)
+                if len(slot.tokens) >= slot.total_budget:
+                    settle(sched.retire(slot)["order"], "FINISHED_BUDGET")
+            continue
+        do_decode()
+        # a fully stalled pack (all at the preemption bound) can't make
+        # progress page-wise; force-fail the youngest, as the engine does
+        prep = sched.prepare_decode(1)
+        if (not prep.runnable and not prep.preempted and prep.stalled
+                and not any(len(s.tokens) >= s.total_budget
+                            for s in sched.running)):
+            victim = max(prep.stalled, key=lambda s: s.order)
+            settle(sched.retire(victim, status="FAILED")["order"], "FAILED")
+
+    # exactly one terminal per submitted order, counters agree, no leaks
+    assert set(terminal) == set(range(sched.submitted))
+    counts = sched.terminal_counts()
+    assert sum(counts.values()) == sched.submitted
+    for status in counts:
+        assert counts[status] == sum(1 for s in terminal.values()
+                                     if s == status), (status, terminal)
+    assert sched.tokens_in_flight == 0
+    assert table.allocator.available == free0
+    assert table.allocator.in_use == 0
+    assert (table.table == kvc.TRASH_PAGE).all()
+
+
+def test_lifecycle_machine_random():
+    """Deterministic randomized sweep (runs with or without hypothesis)."""
+    rng = np.random.RandomState(7)
+    for _ in range(60):
+        slots = int(rng.randint(1, 4))
+        page = int(rng.choice([2, 4]))
+        maxp = int(rng.randint(2, 6))
+        _lifecycle_machine(
+            lambda lo, hi: int(rng.randint(lo, hi + 1)),
+            slots, page, maxp,
+            n_requests=int(rng.randint(1, 10)),
+            n_events=int(rng.randint(1, 60)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_lifecycle_machine_hypothesis(data):
+        slots = data.draw(st.integers(1, 3))
+        page = data.draw(st.sampled_from([2, 4]))
+        maxp = data.draw(st.integers(2, 5))
+        _lifecycle_machine(
+            lambda lo, hi: data.draw(st.integers(lo, hi)),
+            slots, page, maxp,
+            n_requests=data.draw(st.integers(1, 8)),
+            n_events=data.draw(st.integers(1, 40)))
