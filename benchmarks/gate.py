@@ -1,0 +1,208 @@
+"""Perf-regression gate: compare a fresh BENCH_*.json against a baseline.
+
+    python benchmarks/gate.py --baseline BENCH_serving.json \
+        --candidate results/BENCH_serving_smoke.json [--tol-scale 3] \
+        [--out delta.md]
+
+Both files are flattened to dotted-path -> numeric-leaf maps and every
+shared metric is judged by a DIRECTION-AWARE tolerance rule (first
+matching pattern wins; patterns are fnmatch'd against the full dotted
+path, then the leaf key):
+
+* ``higher`` — throughput-like: the candidate may not DROP more than
+  ``tol`` relative (tokens/s, speedups: 10%).  Rising is never a failure.
+* ``lower``  — latency-like: the candidate may not RISE more than ``tol``
+  relative (p99/p50/makespan: 15%).
+* ``exact``  — parity fields that are deterministic functions of the
+  workload and pool math (token counts, pool bytes, slot capacities,
+  ``lost_requests``): any difference fails.
+* ``info``   — reported in the delta table, never gated.  This is the
+  DEFAULT for unknown metrics: a new bench field must earn a rule before
+  it can break CI, and timing-noisy sections (overload goodput, status
+  mixes under deadline pressure, obs overhead) stay visible but neutral.
+
+``--tol-scale`` multiplies every relative tolerance — CI gates a smoke
+run against a same-runner self-baseline with ``--tol-scale 3`` (two runs
+minutes apart still share no warm caches), while the deliberately
+perturbed leg uses the default scale so a synthetic 20% tokens/s
+regression must fail.
+
+Output is a markdown delta table (worst offenders first); exit status is
+nonzero iff any gated metric failed — the perf trajectory the ROADMAP's
+bench-driven items hang off.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from fnmatch import fnmatch
+from typing import Dict, List, Optional, Tuple
+
+# (pattern, kind, tol) — first match wins; kind in higher/lower/exact/info
+DEFAULT_RULES: Tuple[Tuple[str, str, float], ...] = (
+    # timing-noisy or derived-ratio sections: visible, never gated
+    ("*overhead_frac", "info", 0.0),
+    ("*overload*", "info", 0.0),
+    ("*statuses*", "info", 0.0),
+    ("*p99_ratio*", "info", 0.0),
+    # throughput: may not drop
+    ("*tokens_per_s", "higher", 0.10),
+    ("speedup*", "higher", 0.10),
+    ("*speedup*", "higher", 0.10),
+    # latency: may not rise
+    ("*p99*", "lower", 0.15),
+    ("*p50*", "lower", 0.15),
+    ("*mean_latency_s", "lower", 0.15),
+    ("*makespan_s", "lower", 0.15),
+    # deterministic parity: workload token counts, pool math, invariants
+    ("*lost_requests", "exact", 0.0),
+    ("kv_slots_ratio*", "exact", 0.0),
+    ("*.tokens", "exact", 0.0),
+    ("*pool_bytes", "exact", 0.0),
+    ("*bytes_per_slot", "exact", 0.0),
+    ("*usable_pages", "exact", 0.0),
+    ("*.slots", "exact", 0.0),
+    ("*pad_waste", "exact", 0.0),
+)
+UNKNOWN_RULE = ("<unknown>", "info", 0.0)
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Dotted-path -> numeric leaves; strings/bools/None/lists are config
+    echo, not metrics, and are skipped."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, bool) or obj is None:
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def match_rule(path: str, rules=DEFAULT_RULES) -> Tuple[str, str, float]:
+    leaf = path.rsplit(".", 1)[-1]
+    for pat, kind, tol in rules:
+        if fnmatch(path, pat) or fnmatch(leaf, pat):
+            return (pat, kind, tol)
+    return UNKNOWN_RULE
+
+
+def judge(path: str, base: float, cand: float, tol_scale: float = 1.0,
+          rules=DEFAULT_RULES) -> Dict:
+    """One metric's verdict: PASS / FAIL / INFO plus the signed relative
+    delta (positive = candidate higher)."""
+    pat, kind, tol = match_rule(path, rules)
+    rel = (cand - base) / abs(base) if base else (0.0 if cand == base
+                                                  else float("inf"))
+    verdict = "INFO"
+    if kind == "exact":
+        verdict = "PASS" if cand == base else "FAIL"
+    elif kind == "higher":
+        verdict = "FAIL" if rel < -tol * tol_scale else "PASS"
+    elif kind == "lower":
+        verdict = "FAIL" if rel > tol * tol_scale else "PASS"
+    return {"metric": path, "baseline": base, "candidate": cand,
+            "rel": rel, "rule": kind, "pattern": pat,
+            "tol": tol * tol_scale, "verdict": verdict}
+
+
+def compare(baseline: Dict, candidate: Dict, tol_scale: float = 1.0,
+            rules=DEFAULT_RULES) -> Dict:
+    """Flatten + judge every shared metric; keys present on only one side
+    are listed (schema drift is worth seeing) but never gated."""
+    fb, fc = flatten(baseline), flatten(candidate)
+    rows = [judge(p, fb[p], fc[p], tol_scale, rules)
+            for p in sorted(set(fb) & set(fc))]
+    sev = {"FAIL": 0, "PASS": 1, "INFO": 2}
+    rows.sort(key=lambda r: (sev[r["verdict"]], -abs(r["rel"])))
+    return {
+        "rows": rows,
+        "failed": [r for r in rows if r["verdict"] == "FAIL"],
+        "only_baseline": sorted(set(fb) - set(fc)),
+        "only_candidate": sorted(set(fc) - set(fb)),
+    }
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.6g}"
+
+
+def markdown_table(result: Dict, max_info_rows: int = 20) -> str:
+    """The human-facing delta report: failures + gated passes in full,
+    informational rows truncated (they dominate by count)."""
+    lines = ["| metric | baseline | candidate | Δ | rule | verdict |",
+             "|---|---|---|---|---|---|"]
+    shown_info = 0
+    hidden = 0
+    for r in result["rows"]:
+        if r["verdict"] == "INFO":
+            shown_info += 1
+            if shown_info > max_info_rows:
+                hidden += 1
+                continue
+        delta = ("∞" if r["rel"] == float("inf")
+                 else f"{r['rel'] * 100:+.1f}%")
+        rule = (r["rule"] if r["rule"] in ("exact", "info")
+                else f"{r['rule']} ±{r['tol'] * 100:.0f}%")
+        mark = {"FAIL": "**FAIL**", "PASS": "PASS",
+                "INFO": "info"}[r["verdict"]]
+        lines.append(f"| {r['metric']} | {_fmt(r['baseline'])} | "
+                     f"{_fmt(r['candidate'])} | {delta} | {rule} | "
+                     f"{mark} |")
+    if hidden:
+        lines.append(f"| … {hidden} more informational rows | | | | | |")
+    for label, key in (("baseline only", "only_baseline"),
+                       ("candidate only", "only_candidate")):
+        if result[key]:
+            lines.append("")
+            lines.append(f"Metrics in {label} (not gated): "
+                         + ", ".join(result[key][:10])
+                         + (" …" if len(result[key]) > 10 else ""))
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Direction-aware perf-regression gate over BENCH_*.json "
+                    "files (docs/benchmarks.md).")
+    ap.add_argument("--baseline", required=True, metavar="FILE",
+                    help="the checked-in (or self-baseline) BENCH json")
+    ap.add_argument("--candidate", required=True, metavar="FILE",
+                    help="the fresh BENCH json to judge")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="multiply every relative tolerance (CI self-"
+                         "baseline noise: 3)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the markdown delta table to FILE")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    result = compare(baseline, candidate, tol_scale=args.tol_scale)
+    table = markdown_table(result)
+    n_gated = sum(1 for r in result["rows"] if r["verdict"] != "INFO")
+    head = (f"## perf gate: `{args.candidate}` vs `{args.baseline}` "
+            f"(tol×{args.tol_scale:g})\n\n"
+            f"{len(result['rows'])} shared metrics, {n_gated} gated, "
+            f"{len(result['failed'])} failed\n")
+    report = head + "\n" + table + "\n"
+    print(report)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report)
+    if result["failed"]:
+        for r in result["failed"]:
+            print(f"[gate] FAIL {r['metric']}: {_fmt(r['baseline'])} -> "
+                  f"{_fmt(r['candidate'])} ({r['rel'] * 100:+.1f}%, rule "
+                  f"{r['rule']} ±{r['tol'] * 100:.0f}%)", file=sys.stderr)
+        return 1
+    print("[gate] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,15 +2,28 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run compression throughput
+
+Smoke-scale JSON outputs land under ``results/`` (gitignored) — only the
+full runs' checked-in BENCH_*.json live at the repo root, as the perf
+baselines ``benchmarks/gate.py`` judges against.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 from . import (bench_accuracy_tradeoff, bench_complexity, bench_compression,
                bench_decoupling, bench_equiv_ops, bench_paged_attention,
                bench_quant, bench_serving, bench_throughput)
+
+RESULTS_DIR = "results"
+
+
+def _smoke_out(name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, name)
+
 
 ALL = {
     "compression": bench_compression.main,        # paper Fig. 3
@@ -22,11 +35,12 @@ ALL = {
     # serving suite (smoke-scale here; the full runs write the checked-in
     # BENCH_*.json files — see each bench's module docstring)
     "serving": lambda: bench_serving.main(
-        ["--smoke", "--out", "BENCH_serving_smoke.json"]),
+        ["--smoke", "--out", _smoke_out("BENCH_serving_smoke.json")]),
     "paged_attention": lambda: bench_paged_attention.main(
-        ["--smoke", "--out", "BENCH_paged_attention_smoke.json"]),
+        ["--smoke", "--out",
+         _smoke_out("BENCH_paged_attention_smoke.json")]),
     "quant": lambda: bench_quant.main(
-        ["--smoke", "--out", "BENCH_quant_smoke.json"]),
+        ["--smoke", "--out", _smoke_out("BENCH_quant_smoke.json")]),
 }
 
 

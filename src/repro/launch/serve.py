@@ -15,13 +15,15 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
 from ..models.registry import build_model
-from ..obs import Obs
+from ..obs import Obs, resolve_hardware
+from ..obs.chrometrace import write_trace
 from ..quant import QuantPolicy
+from ..roofline.analysis import HARDWARE_PRESETS
 from ..serve.engine import ContinuousEngine, Engine, Request
 from ..serve.kvcache import servable_reasons
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
     ap.add_argument("--full", action="store_true")
@@ -90,7 +92,16 @@ def main():
     ap.add_argument("--no-obs", action="store_true",
                     help="disable traces/histograms (counters stay live; "
                          "the zero-overhead telemetry path)")
-    args = ap.parse_args()
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "serve (engine dispatch lanes, one lane per "
+                         "request, counter tracks) to FILE; open at "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--hardware", default="auto",
+                    choices=["auto"] + sorted(HARDWARE_PRESETS),
+                    help="roofline HardwareSpec the profiler attributes "
+                         "dispatches against (auto = detect jax backend)")
+    args = ap.parse_args(argv)
 
     getter = get_config if args.full else get_smoke_config
     cfg = getter(args.arch)
@@ -101,7 +112,8 @@ def main():
                         quant_weights=args.quant_weights,
                         weight_bits=args.weight_bits)
     obs = Obs(enabled=not args.no_obs, emit_path=args.metrics_out,
-              emit_every=args.metrics_every)
+              emit_every=args.metrics_every,
+              hardware=resolve_hardware(args.hardware))
     if args.engine == "continuous":
         reasons = servable_reasons(cfg)
         if reasons:
@@ -169,15 +181,34 @@ def main():
         print(f"[launch.serve] lifecycle: statuses={nonzero} "
               f"admission={st['admission']} preempted={st['preempted']} "
               f"stalled={st['stalled']} anomalies={st['anomalies']}")
+        print(f"[launch.serve] pool pressure: free_pages={st['free_pages']} "
+              f"min_free_pages={st['min_free_pages']} (low-water headroom "
+              f"of {engine.num_pages - 1} usable)")
     else:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "
               f"prefill/decode split={st['prefill_s']:.2f}s/"
               f"{st['decode_s']:.2f}s")
+    if not args.no_obs and st.get("roofline"):
+        print(f"[launch.serve] roofline ({st['hardware']}):")
+        for kind, r in st["roofline"].items():
+            if not r["dispatches"]:
+                continue
+            print(f"  {kind:<22} n={r['dispatches']:<4} "
+                  f"{r['achieved_flops_per_s'] / 1e9:8.2f} GFLOP/s  "
+                  f"{r['achieved_bytes_per_s'] / 1e9:8.2f} GB/s  "
+                  f"frac={r['roofline_frac']:.3g} ({r['bound']}-bound)")
     if args.metrics_out is not None:
         engine.obs.close()                 # final snapshot + trailing traces
         print(f"[launch.serve] metrics: {engine.obs.emitter.lines_written} "
               f"lines -> {args.metrics_out}")
+    if args.trace_out is not None:
+        trace = write_trace(engine.obs, args.trace_out,
+                            extra_meta={"arch": args.arch,
+                                        "engine": args.engine})
+        print(f"[launch.serve] chrome trace: "
+              f"{len(trace['traceEvents'])} events -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
     if not args.no_obs:
         print("[launch.serve] obs summary:")
         print(engine.obs.summary())

@@ -21,13 +21,15 @@ from typing import Callable, Dict, Optional
 
 from .emit import Emitter, validate_jsonl, validate_line
 from .metrics import (BYTES_BUCKETS, RATIO_BUCKETS, SECONDS_BUCKETS,
-                      Counter, Gauge, Histogram, Registry)
+                      Counter, Gauge, Histogram, Registry, prometheus_text)
+from .prof import DispatchCost, Profiler, aot_compile, resolve_hardware
 from .trace import RequestTrace, TraceStore
 
 __all__ = ["Obs", "Registry", "Counter", "Gauge", "Histogram",
            "RequestTrace", "TraceStore", "Emitter", "validate_line",
            "validate_jsonl", "SECONDS_BUCKETS", "BYTES_BUCKETS",
-           "RATIO_BUCKETS"]
+           "RATIO_BUCKETS", "Profiler", "DispatchCost", "aot_compile",
+           "resolve_hardware", "prometheus_text"]
 
 
 class Obs:
@@ -36,10 +38,18 @@ class Obs:
     def __init__(self, *, enabled: bool = True,
                  emit_path: Optional[str] = None,
                  emit_callback: Optional[Callable[[Dict], None]] = None,
-                 emit_every: int = 10):
+                 emit_every: int = 10,
+                 hardware=None):
         self.enabled = bool(enabled)
         self.registry = Registry()
         self.traces = TraceStore()
+        # dispatch-level roofline attribution (obs/prof.py); engines
+        # register compiled executables and stamp fenced dispatches —
+        # disabled obs keeps the profiler object (wiring stays uniform)
+        # but every on_dispatch is a no-op.  ``hardware`` is a
+        # roofline.HardwareSpec; None auto-detects the jax backend.
+        self.profiler = Profiler(self.registry, hardware=hardware,
+                                 enabled=self.enabled)
         self._t0 = time.perf_counter()
         self.emitter: Optional[Emitter] = None
         if emit_path is not None or emit_callback is not None:

@@ -181,13 +181,38 @@ def validate_jsonl(path: str) -> Dict[str, int]:
     return counts
 
 
+def last_snapshot(path: str) -> Dict:
+    """The final (cumulative) snapshot line of an emitter file."""
+    snap = None
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            obj = json.loads(line)
+            if obj.get("type") == "snapshot":
+                snap = obj
+    if snap is None:
+        raise ValueError(f"{path}: no snapshot lines")
+    return snap
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        description="Validate an obs emitter JSONL file (CI smoke).")
-    ap.add_argument("--validate", metavar="FILE", required=True)
+        description="Validate an obs emitter JSONL file (CI smoke) or "
+                    "render its last snapshot for a Prometheus scrape.")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--validate", metavar="FILE",
+                      help="schema-check every line of FILE")
+    mode.add_argument("--to-prom", metavar="FILE",
+                      help="print FILE's last snapshot in Prometheus text "
+                           "exposition format (docs/observability.md)")
     ap.add_argument("--min-traces", type=int, default=0,
-                    help="additionally require at least N trace lines")
+                    help="with --validate: require at least N trace lines")
     args = ap.parse_args(argv)
+    if args.to_prom is not None:
+        from .metrics import prometheus_text
+        sys.stdout.write(prometheus_text(last_snapshot(args.to_prom)))
+        return 0
     counts = validate_jsonl(args.validate)
     if counts["trace"] < args.min_traces:
         print(f"[obs.emit] {args.validate}: {counts['trace']} trace lines "

@@ -63,17 +63,23 @@ class Counter:
 
 class Gauge:
     """Point-in-time value (queue depth, free pages); ``set`` overwrites,
-    ``max_seen`` tracks the high-water mark for peak telemetry."""
-    __slots__ = ("value", "max_seen")
+    ``max_seen`` / ``min_seen`` track the high/low-water marks for peak and
+    headroom telemetry (``min_seen`` is None until the first ``set`` —
+    unlike ``max_seen`` it cannot start at 0.0, or a pool that never drains
+    would report zero headroom)."""
+    __slots__ = ("value", "max_seen", "min_seen")
 
     def __init__(self):
         self.value = 0.0
         self.max_seen = 0.0
+        self.min_seen: Optional[float] = None
 
     def set(self, v: float) -> None:
         self.value = float(v)
         if v > self.max_seen:
             self.max_seen = float(v)
+        if self.min_seen is None or v < self.min_seen:
+            self.min_seen = float(v)
 
 
 class Histogram:
@@ -224,3 +230,80 @@ class Registry:
         oc = old.get("counters", {})
         return {k: v - oc.get(k, 0.0)
                 for k, v in new.get("counters", {}).items()}
+
+    def to_prometheus(self) -> str:
+        """This registry, right now, in Prometheus text exposition format
+        (see ``prometheus_text``)."""
+        return prometheus_text(self.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition (no client library — the format is 14 lines)
+# ---------------------------------------------------------------------------
+def _prom_split(fname: str) -> Tuple[str, List[Tuple[str, str]]]:
+    """Flattened ``name{k=v,...}`` -> (prometheus_name, label pairs).
+    Dots (our namespace separator) become underscores — Prometheus metric
+    names admit ``[a-zA-Z_:][a-zA-Z0-9_:]*``."""
+    labels: List[Tuple[str, str]] = []
+    if "{" in fname:
+        fname, _, rest = fname.partition("{")
+        for pair in rest.rstrip("}").split(","):
+            k, _, v = pair.partition("=")
+            labels.append((k, v))
+    return fname.replace(".", "_").replace("-", "_"), labels
+
+
+def _prom_labels(labels: List[Tuple[str, str]]) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + body + "}"
+
+
+def prometheus_text(snapshot: Dict) -> str:
+    """Render a ``Registry.snapshot()`` dict in Prometheus text exposition
+    format (version 0.0.4): counters as ``<name>_total``, gauges verbatim,
+    histograms as cumulative ``_bucket{le=...}`` series (including the
+    ``+Inf`` overflow) plus ``_sum`` and ``_count``.
+
+    Operating on the *snapshot* (not the live registry) means the JSONL
+    sidecar can feed a scrape pipeline after the fact:
+    ``python -m repro.obs --to-prom metrics.jsonl`` renders the last
+    snapshot line of a serve run.  ``# TYPE`` headers are emitted once per
+    metric family, series grouped under them, families sorted by name.
+    """
+    families: Dict[str, Dict] = {}
+
+    def fam(pname: str, ptype: str) -> List[str]:
+        f = families.setdefault(pname, {"type": ptype, "lines": []})
+        if f["type"] != ptype:
+            raise ValueError(f"metric family {pname!r} seen as both "
+                             f"{f['type']} and {ptype}")
+        return f["lines"]
+
+    for fname, v in snapshot.get("counters", {}).items():
+        pname, labels = _prom_split(fname)
+        pname += "_total"
+        fam(pname, "counter").append(f"{pname}{_prom_labels(labels)} {v!r}")
+    for fname, v in snapshot.get("gauges", {}).items():
+        pname, labels = _prom_split(fname)
+        fam(pname, "gauge").append(f"{pname}{_prom_labels(labels)} {v!r}")
+    for fname, h in snapshot.get("histograms", {}).items():
+        pname, labels = _prom_split(fname)
+        lines = fam(pname, "histogram")
+        cum = 0
+        for bound, c in zip(h["buckets"], h["counts"]):
+            cum += c
+            ls = _prom_labels(labels + [("le", repr(float(bound)))])
+            lines.append(f"{pname}_bucket{ls} {cum}")
+        ls = _prom_labels(labels + [("le", "+Inf")])
+        lines.append(f"{pname}_bucket{ls} {h['count']}")
+        lines.append(f"{pname}_sum{_prom_labels(labels)} {h['sum']!r}")
+        lines.append(f"{pname}_count{_prom_labels(labels)} {h['count']}")
+
+    out: List[str] = []
+    for pname in sorted(families):
+        f = families[pname]
+        out.append(f"# TYPE {pname} {f['type']}")
+        out.extend(f["lines"])
+    return "\n".join(out) + ("\n" if out else "")

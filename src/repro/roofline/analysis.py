@@ -23,6 +23,7 @@ MoE expert projections count top_k active experts per token.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import re
 from typing import Any, Dict, Tuple
@@ -33,10 +34,59 @@ import numpy as np
 from ..configs.base import ArchConfig, ShapeSpec
 from ..core import circulant as cc
 
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Peak rates of one device — the denominators of every roofline
+    question.  The static dry-run cells and the live dispatch profiler
+    (``repro.obs.prof``) both divide by these, so "fraction of roofline"
+    means the same thing whether the cell was compiled dry or dispatched
+    hot.  ``ridge_flops_per_byte`` is the arithmetic intensity at which a
+    kernel stops being memory-bound on this part."""
+    name: str
+    peak_flops: float            # FLOP/s per chip
+    hbm_bw: float                # HBM bytes/s per chip
+    link_bw: float = 0.0         # bytes/s per interconnect link
+
+    @property
+    def ridge_flops_per_byte(self) -> float:
+        return self.peak_flops / self.hbm_bw
+
+
 # TPU v5e-class hardware constants (assignment-specified)
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # bytes/s per chip
-LINK_BW = 50e9               # bytes/s per ICI link
+TPU_V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                       link_bw=50e9)
+# TPU v4 (the dist rule engine's 256/512-chip mesh target)
+TPU_V4 = HardwareSpec("tpu-v4", peak_flops=275e12, hbm_bw=1.2e12,
+                      link_bw=50e9)
+# One modern server-CPU socket, order of magnitude: tens of f32 GFLOP/s per
+# core x a few dozen cores, ~50 GB/s effective DRAM stream.  Deliberately
+# round numbers — on the host backend the profiler's roofline fraction is a
+# sanity scale, not a calibrated claim (docs/observability.md).
+HOST_CPU = HardwareSpec("host-cpu", peak_flops=2e11, hbm_bw=5e10)
+# Generic data-center GPU placeholder until a real part is measured.
+GPU_GENERIC = HardwareSpec("gpu-generic", peak_flops=1e14, hbm_bw=2e12,
+                           link_bw=25e9)
+
+HARDWARE_PRESETS = {s.name: s for s in (TPU_V5E, TPU_V4, HOST_CPU,
+                                        GPU_GENERIC)}
+
+
+def detect_hardware() -> HardwareSpec:
+    """Preset for the active jax backend (host-CPU default)."""
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return TPU_V5E
+    if backend == "gpu":
+        return GPU_GENERIC
+    return HOST_CPU
+
+
+# Legacy module constants (EXPERIMENTS.md numbers were computed from these);
+# the dry-run report still defaults to the TPU v5e spec.
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16 FLOP/s per chip
+HBM_BW = TPU_V5E.hbm_bw              # bytes/s per chip
+LINK_BW = TPU_V5E.link_bw            # bytes/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -223,8 +273,9 @@ def slstm_scan_correction(cfg: ArchConfig, shape: ShapeSpec,
 
 # ---------------------------------------------------------------------------
 def cell_report(lowered, compiled, cfg: ArchConfig, shape: ShapeSpec,
-                mesh) -> Dict:
-    """All roofline quantities for one compiled cell."""
+                mesh, spec: HardwareSpec = TPU_V5E) -> Dict:
+    """All roofline quantities for one compiled cell (``spec`` picks the
+    hardware denominators; the dry run keeps the TPU v5e default)."""
     chips = int(np.prod(mesh.devices.shape))
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp_size = sizes.get("pod", 1) * sizes.get("data", 1)
@@ -245,9 +296,9 @@ def cell_report(lowered, compiled, cfg: ArchConfig, shape: ShapeSpec,
                         mem["temp_bytes"] - mem["alias_bytes"])
     coll = collective_bytes(compiled.as_text())
 
-    t_compute = flops / PEAK_FLOPS
-    t_memory = bytes_acc / HBM_BW
-    t_coll = coll["total"] / LINK_BW
+    t_compute = flops / spec.peak_flops
+    t_memory = bytes_acc / spec.hbm_bw
+    t_coll = coll["total"] / (spec.link_bw or LINK_BW)
     terms = {"compute_s": t_compute, "memory_s": t_memory,
              "collective_s": t_coll}
     dominant = max(terms, key=terms.get)
@@ -268,9 +319,10 @@ def cell_report(lowered, compiled, cfg: ArchConfig, shape: ShapeSpec,
         model_flops = fwd_per_tok * tokens
 
     hlo_global = flops * chips
-    t_model = model_flops / chips / PEAK_FLOPS
+    t_model = model_flops / chips / spec.peak_flops
     bound = max(terms.values())
     return {
+        "hardware": spec.name,
         "chips": chips,
         "slstm_correction_flops": slstm_extra,
         "flops_per_device": flops,

@@ -18,6 +18,26 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from ..models.registry import Model, build_model
 
+# -- dispatch-kind names (obs/prof.py attribution units) --------------------
+# One vocabulary for what the engines dispatch, shared by the profiler's
+# histogram labels, stats()["roofline"] keys, and the Chrome-trace lanes.
+DECODE_CHUNK_KIND = "decode_chunk"
+
+
+def prefill_kind(n_pages: int) -> str:
+    """Continuous engine: one prefill program per page bucket."""
+    return f"prefill_{n_pages}p"
+
+
+def batch_prefill_kind(batch: int, seq: int) -> str:
+    """Batch engine: prefill recompiles per (B, padded S)."""
+    return f"prefill_b{batch}_s{seq}"
+
+
+def batch_decode_kind(steps: int, batch: int) -> str:
+    """Batch engine: one scanned decode loop per (step budget, B)."""
+    return f"decode_loop_s{steps}_b{batch}"
+
 
 def make_prefill_step(cfg: ArchConfig, logits_sharding=None) -> Callable:
     model = build_model(cfg)

@@ -42,7 +42,7 @@ from ..dist import sharding as dist_sharding
 from ..launch import mesh as mesh_lib
 from ..models import transformer as tfm
 from ..models.registry import build_model
-from ..obs import BYTES_BUCKETS, RATIO_BUCKETS, Obs
+from ..obs import BYTES_BUCKETS, RATIO_BUCKETS, Obs, aot_compile
 from ..quant.codec import QuantPolicy
 from . import decode as dec
 from . import kvcache as kvc
@@ -125,6 +125,12 @@ class Engine:
                                  seed=seed),
             donate_argnums=(2,))
         self._loops: Dict[int, object] = {}
+        # AOT-compiled executables per concrete shape: (callable, cost).
+        # Compiling via .lower().compile() instead of letting the jit
+        # wrapper trace on first call costs nothing extra (one compile
+        # either way) and hands the profiler the executable whose
+        # cost_analysis() prices every later dispatch of that shape.
+        self._aot: Dict[tuple, tuple] = {}
         # telemetry (repro.obs): the registry IS the stats() backing store;
         # counters are held directly so the hot path is one float add
         self.obs = obs if obs is not None else Obs()
@@ -219,24 +225,42 @@ class Engine:
                 f"ring buffer ({need}): SWA prefill keeps the window tail, "
                 f"so prompts must be >= min(window, cache length)")
         cache = self.model.init_cache(B, S + steps - 1, dtype=jnp.float32)
-        logits, cache = self._prefill(self.params, batch, cache)
+        prof = self.obs.profiler
+        key = ("prefill", B, S, steps)
+        if key not in self._aot:
+            self._aot[key] = aot_compile(
+                self._prefill, (self.params, batch, cache), prof,
+                dec.batch_prefill_kind(B, S))
+        pf, pf_cost = self._aot[key]
+        logits, cache = pf(self.params, batch, cache)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         # fence BEFORE every span boundary: the t1/t2 marks (and the trace
         # spans derived from them) measure device work, not dispatch
         jax.block_until_ready(nxt)
         t1 = time.perf_counter()
+        loop_cost = None
 
         if self.decode_mode == "per_token":
             gen = self._decode_per_token(nxt, cache, S, steps)
         else:
             lengths = jnp.asarray([min(r.max_new_tokens, steps)
                                    for r in reqs], jnp.int32)
-            gen, _ = self._loop_fn(steps)(self.params, nxt, cache,
-                                          jnp.int32(S), lengths)
+            lkey = ("loop", steps, B, S)
+            if lkey not in self._aot:
+                self._aot[lkey] = aot_compile(
+                    self._loop_fn(steps),
+                    (self.params, nxt, cache, jnp.int32(S), lengths),
+                    prof, dec.batch_decode_kind(steps, B))
+            loop, loop_cost = self._aot[lkey]
+            gen, _ = loop(self.params, nxt, cache, jnp.int32(S), lengths)
         jax.block_until_ready(gen)
         gen = np.asarray(gen)                          # (B, steps)
         t2 = time.perf_counter()
         prefill_s, decode_s = t1 - t0, t2 - t1
+        prof.on_dispatch(pf_cost, self.obs.rebase(t0), self.obs.rebase(t1))
+        if self.decode_mode != "per_token":
+            prof.on_dispatch(loop_cost, self.obs.rebase(t1),
+                             self.obs.rebase(t2))
 
         out = []
         for i, r in enumerate(reqs):
@@ -298,6 +322,8 @@ class Engine:
         unified ``dispatches`` counter (one decode dispatch per batch)."""
         st = _engine_stats_view(self.obs, "batch")
         st["batches"] = st["dispatches"]     # legacy alias (one release)
+        st["hardware"] = self.obs.profiler.spec.name
+        st["roofline"] = self.obs.profiler.summary()
         return st
 
 
@@ -415,6 +441,11 @@ class ContinuousEngine:
                                    registry=reg, admission=admission,
                                    max_queue=max_queue,
                                    max_preemptions=max_preemptions)
+        # sample the control-plane gauges at every dispatch end — the
+        # Chrome-trace counter tracks (obs/chrometrace.py)
+        for gname in ("pool.free_pages", "sched.queue_depth",
+                      "sched.tokens_in_flight"):
+            self.obs.profiler.watch(gname)
         # ONE fixed-size decode program: chunk size never varies, so the
         # loop compiles exactly once — adaptive sizing would dodge some
         # frozen-slot steps but risks multi-second mid-serving compiles the
@@ -424,8 +455,12 @@ class ContinuousEngine:
             eos_id=eos_id, seed=seed, paged_impl=paged_attn,
             nan_guard=nan_guard),
             donate_argnums=(2,))
+        # AOT executable + DispatchCost for the one decode program,
+        # captured at the first dispatch (obs/prof.py); prefill buckets
+        # cache theirs in self._prefills
+        self._loop_exec = None
         self.nan_guard = nan_guard
-        self._prefills: Dict[int, object] = {}
+        self._prefills: Dict[int, tuple] = {}
         self._cur = np.zeros(max_slots, np.int32)
         self._pos = np.zeros(max_slots, np.int32)
         self._rem = np.zeros(max_slots, np.int32)
@@ -456,13 +491,18 @@ class ContinuousEngine:
         self._stall_limit = 3               # then FAIL the youngest stalled
 
     # -- jit caches -------------------------------------------------------
-    def _prefill_fn(self, n_pages: int):
-        fn = self._prefills.get(n_pages)
-        if fn is None:
-            fn = jax.jit(dec.make_prefill_pack_step(
+    def _prefill_exec(self, n_pages: int, args) -> tuple:
+        """(compiled callable, DispatchCost|None) for a page bucket —
+        compiled AOT on first use with the bucket's concrete ``args`` so
+        the profiler prices every later dispatch of the bucket."""
+        ent = self._prefills.get(n_pages)
+        if ent is None:
+            jitfn = jax.jit(dec.make_prefill_pack_step(
                 self.cfg, n_pages, self.page_size), donate_argnums=(2,))
-            self._prefills[n_pages] = fn
-        return fn
+            ent = aot_compile(jitfn, args, self.obs.profiler,
+                              dec.prefill_kind(n_pages))
+            self._prefills[n_pages] = ent
+        return ent
 
     # -- public lifecycle API ---------------------------------------------
     def _now(self) -> float:
@@ -665,12 +705,16 @@ class ContinuousEngine:
                 (1, self.cfg.num_patches, self.cfg.d_model), jnp.float32)
         pages = jnp.asarray(self.block_table.pages(slot.index)[:n_pages],
                             jnp.int32)
-        nxt, ok, self.pool = self._prefill_fn(n_pages)(
+        fn, cost = self._prefill_exec(
+            n_pages, (self.params, batch, self.pool, pages, jnp.int32(S)))
+        nxt, ok, self.pool = fn(
             self.params, batch, self.pool, pages, jnp.int32(S))
         # fence the whole dispatch (token AND page scatter) so the prefill
         # span — and the trace's first-token mark — measure device work
         jax.block_until_ready((nxt, self.pool))
         t1 = time.perf_counter()
+        self.obs.profiler.on_dispatch(cost, self.obs.rebase(t0),
+                                      self.obs.rebase(t1))
         dt = t1 - t0
         self._ctr["prefill_s"].inc(dt)
         self._ctr["prompt_tokens"].inc(S)
@@ -739,7 +783,15 @@ class ContinuousEngine:
         if self._table_version != self.block_table.version:
             self._dev_table = self.block_table.device_table()
             self._table_version = self.block_table.version
-        buf, cur, self.pool, pos, rem, done, anom = self._loop(
+        if self._loop_exec is None:
+            self._loop_exec = aot_compile(
+                self._loop,
+                (self.params, jnp.asarray(self._cur), self.pool,
+                 self._dev_table, jnp.asarray(self._pos),
+                 jnp.asarray(rem_dispatch)),
+                self.obs.profiler, dec.DECODE_CHUNK_KIND)
+        loop, loop_cost = self._loop_exec
+        buf, cur, self.pool, pos, rem, done, anom = loop(
             self.params, jnp.asarray(self._cur), self.pool,
             self._dev_table, jnp.asarray(self._pos),
             jnp.asarray(rem_dispatch))
@@ -747,6 +799,8 @@ class ContinuousEngine:
         # the per-chunk trace marks) measure the device program
         jax.block_until_ready(buf)
         t1 = time.perf_counter()
+        self.obs.profiler.on_dispatch(loop_cost, self.obs.rebase(t0),
+                                      self.obs.rebase(t1))
         buf = np.asarray(buf)
         self._cur = np.array(cur)
         self._pos = np.array(pos)
@@ -881,6 +935,11 @@ class ContinuousEngine:
         v = self.obs.registry.value
         st["anomalies"] = int(v("engine.anomalies"))
         st["free_pages"] = int(v("pool.free_pages"))
+        # pool-pressure headroom: the low-water mark of the free list over
+        # the whole serve (the number the prefix-cache sizing will need)
+        low = self.obs.registry.gauge("pool.free_pages").min_seen
+        st["min_free_pages"] = (int(low) if low is not None
+                                else st["free_pages"])
         st["pages_alloc"] = int(v("pool.pages_alloc"))
         st["pages_freed"] = int(v("pool.pages_freed"))
         st["scale_growths"] = int(v("quant.scale_growths"))
@@ -894,4 +953,6 @@ class ContinuousEngine:
             self.page_size, self.paged_attn))
         st["decode_peak_bytes_est"] = (st["pool_bytes"]
                                        + st["peak_attention_bytes"])
+        st["hardware"] = self.obs.profiler.spec.name
+        st["roofline"] = self.obs.profiler.summary()
         return st

@@ -50,9 +50,10 @@ def test_counter_rejects_negative():
 
 def test_gauge_high_water():
     g = Gauge()
-    for v, peak in [(3, 3), (1, 3), (7, 7), (0, 7)]:
+    assert g.min_seen is None              # unset != "saw zero headroom"
+    for v, peak, low in [(3, 3, 3), (1, 3, 1), (7, 7, 1), (0, 7, 0)]:
         g.set(v)
-        assert g.value == v and g.max_seen == peak
+        assert g.value == v and g.max_seen == peak and g.min_seen == low
 
 
 # ---------------------------------------------------------------------------
