@@ -1,0 +1,213 @@
+"""Fleet resilience: goodput before / during / after a replica crash.
+
+A 2-replica fleet (repro.fleet: JSQ router + health machine + recompute
+migration) serves a deadline-carrying Poisson workload offered at ~2x the
+fleet's measured capacity, and one replica is killed mid-serving.  The
+bench timestamps every fleet-level settlement and splits the timeline at
+the kill and at the settlement of the last MIGRATED request:
+
+* ``before``         — steady state, both replicas serving
+* ``during_crash``   — kill -> last migrated request settles: the fleet is
+  re-placing salvaged work on the survivor, goodput dips
+* ``after_recovery`` — survivor-only steady state (~half the fleet's
+  capacity; under 2x oversubscription the deadline misses climb)
+
+Goodput counts only tokens of requests that FINISHED (deadline expiries
+surface as TIMEOUT and contribute nothing a client would read).  The
+lifecycle invariant rides along: every request settles in exactly one
+terminal status, zero lost, and the survivor's page pool ends restored.
+
+Crash-window numbers are inherently noisy (the kill lands wherever the
+scheduler was); gate.py reports them as informational rather than gating.
+
+  PYTHONPATH=src python benchmarks/bench_fleet.py --out BENCH_fleet.json
+  PYTHONPATH=src python benchmarks/bench_fleet.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.fleet import DOWN, EngineReplica, Router
+from repro.models.registry import build_model
+from repro.obs import Obs
+from repro.serve.engine import ContinuousEngine, Request
+from repro.serve.scheduler import FINISHED_STATUSES
+
+try:                                   # package run (python -m benchmarks.run)
+    from .common import make_serving_workload
+except ImportError:                    # standalone (python benchmarks/...)
+    from common import make_serving_workload
+
+
+def _phase(settles, t0, t1, min_window=1e-3):
+    """Goodput over one window of the settlement timeline."""
+    window = max(t1 - t0, min_window)
+    inside = [(t, res) for t, res in settles if t0 <= t < t1]
+    good = [res for _, res in inside if res["status"] in FINISHED_STATUSES]
+    return {
+        "window_s": window,
+        "settled": len(inside),
+        "finished": len(good),
+        "goodput_tokens_per_s":
+            sum(r["decode_len"] for r in good) / window,
+    }
+
+
+def bench_fleet_crash(cfg, params, reqs, *, engine_kw, replicas=2,
+                      oversubscription=2.0, seed=0) -> dict:
+    """One crash experiment: calibrate capacity, offer 2x, kill replica 0
+    mid-serving, phase the goodput timeline around the crash."""
+    # -- calibrate: saturated single-engine drain = per-replica capacity
+    cal = ContinuousEngine(cfg, params, obs=Obs(), **engine_kw)
+    cal.generate(reqs)                                  # compile + warm
+    t0 = time.perf_counter()
+    cal.generate(reqs)
+    makespan_1 = time.perf_counter() - t0
+    # generous enough that steady-state requests finish despite 2x
+    # oversubscription queueing — the misses concentrate in the crash
+    # window and the survivor-only tail
+    deadline_s = round(2.0 * makespan_1, 3)
+    # offer the whole workload over the span the fleet could drain it in,
+    # divided by the oversubscription factor
+    span = makespan_1 / replicas / oversubscription
+    arrivals = [i * span / len(reqs) for i in range(len(reqs))]
+    dl_reqs = [dataclasses.replace(r, deadline_s=deadline_s) for r in reqs]
+
+    # -- fleet under test (each engine warmed so compile stays out of the
+    # timed window)
+    obs = Obs()
+    pool = []
+    for i in range(replicas):
+        eng = ContinuousEngine(cfg, params, obs=obs.scoped(replica=f"r{i}"),
+                               **engine_kw)
+        eng.generate(reqs[:2])
+        pool.append(EngineReplica(f"r{i}", eng))
+    router = Router(pool, policy="jsq", seed=seed, obs=obs)
+    victim = pool[0]
+
+    orders = {router.submit(r, arrival_s=a): None
+              for r, a in zip(dl_reqs, arrivals)}
+    settles = []                        # (router-clock time, result)
+    seen = set()
+    killed_at = None
+    recovered_at = None
+    pending_g = obs.registry.gauge("fleet.pending_depth")
+    while len(seen) < len(orders):
+        if not router.step():
+            time.sleep(2e-4)
+        now = router.now()
+        for o in orders:
+            if o not in seen and router.result(o) is not None:
+                seen.add(o)
+                settles.append((now, router.result(o)))
+        if killed_at is None and len(seen) >= max(1, len(orders) // 6) and \
+                any(s.tokens for s in victim.engine.scheduler.running):
+            victim.force_crash()
+            killed_at = router.now()
+        elif killed_at is not None and recovered_at is None and \
+                victim.salvaged and pending_g.value == 0:
+            # every salvaged request is re-placed on the survivor: the
+            # fleet is back to (reduced-capacity) steady state
+            recovered_at = now
+    t_end = router.now()
+    assert killed_at is not None, "workload drained before the kill armed"
+    if recovered_at is None:
+        recovered_at = t_end
+
+    results = [router.result(o, pop=True) for o in orders]
+    assert all(r is not None for r in results), "lost requests"
+    statuses = {}
+    for r in results:
+        statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+    migrated = [r for r in results if r["migrations"] > 0]
+    survivors = [p for p in pool if p.state != DOWN]
+    assert survivors and all(
+        p.engine.stats()["pages_in_use"] == 0 for p in survivors)
+    router.drain()
+
+    rs = router.stats()
+    return {
+        "deadline_s": deadline_s,
+        "oversubscription": oversubscription,
+        "single_replica_makespan_s": makespan_1,
+        "killed_at_s": killed_at,
+        "recovered_at_s": recovered_at,
+        "makespan_s": t_end,
+        "phases": {
+            "before": _phase(settles, 0.0, killed_at),
+            "during_crash": _phase(settles, killed_at, recovered_at),
+            "after_recovery": _phase(settles, recovered_at,
+                                     t_end + 1e-9),
+        },
+        "statuses": statuses,
+        "lost_requests": len(reqs) - sum(statuses.values()),
+        "served_frac": sum(statuses.get(s, 0) for s in FINISHED_STATUSES)
+        / len(reqs),
+        "migrated_requests": len(migrated),
+        "migrated_finished": sum(1 for r in migrated
+                                 if r["status"] in FINISHED_STATUSES),
+        "failovers": rs["failovers"],
+        "place_retries": rs["place_retries"],
+        "shed": rs["shed"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--oversubscription", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI workload (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+
+    cfg = get_smoke_config(args.arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    reqs, _ = make_serving_workload(
+        args.requests, prompt_lens=(8, 12, 16), new_tokens=(8, 12, 16),
+        vocab=cfg.vocab_size, seed=args.seed)
+    engine_kw = dict(max_slots=4, max_seq=32, page_size=8,
+                     decode_chunk=4, admission="optimistic",
+                     max_queue=args.requests)
+
+    result = {
+        "bench": "fleet",
+        "arch": args.arch,
+        "requests": args.requests,
+        "replicas": args.replicas,
+        "device": jax.devices()[0].platform,
+        "fleet_crash": bench_fleet_crash(
+            cfg, params, reqs, engine_kw=engine_kw,
+            replicas=args.replicas,
+            oversubscription=args.oversubscription, seed=args.seed),
+    }
+    fc = result["fleet_crash"]
+    print(f"fleet crash bench: {args.requests} reqs over {args.replicas} "
+          f"replicas @ {args.oversubscription}x, deadline "
+          f"{fc['deadline_s']}s")
+    for name, ph in fc["phases"].items():
+        print(f"  {name:16s} window={ph['window_s']:.3f}s "
+              f"settled={ph['settled']:3d} "
+              f"goodput={ph['goodput_tokens_per_s']:8.1f} tok/s")
+    print(f"  statuses={fc['statuses']} migrated={fc['migrated_requests']} "
+          f"lost={fc['lost_requests']}")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,6 +46,25 @@ DEFAULT_RULES: Tuple[Tuple[str, str, float], ...] = (
     ("*overload*", "info", 0.0),
     ("*statuses*", "info", 0.0),
     ("*p99_ratio*", "info", 0.0),
+    # fleet crash-window metrics: where the kill lands depends on wall
+    # time, so everything phased around it is informational — the
+    # exact-zero lost-request invariant below still gates
+    ("*during_crash*", "info", 0.0),
+    ("*after_recovery*", "info", 0.0),
+    ("*killed_at_s", "info", 0.0),
+    ("*recovered_at_s", "info", 0.0),
+    ("*migrated*", "info", 0.0),
+    ("*failovers", "info", 0.0),
+    ("*place_retries", "info", 0.0),
+    ("*shed*", "info", 0.0),
+    ("*served_frac", "info", 0.0),
+    ("fleet_crash*goodput_tokens_per_s", "info", 0.0),
+    ("fleet_crash*window_s", "info", 0.0),
+    ("fleet_crash*settled", "info", 0.0),
+    ("fleet_crash*finished", "info", 0.0),
+    ("fleet_crash*deadline_s", "info", 0.0),
+    ("fleet_crash*makespan_s", "info", 0.0),
+    ("fleet_crash*oversubscription", "info", 0.0),
     # throughput: may not drop
     ("*tokens_per_s", "higher", 0.10),
     ("speedup*", "higher", 0.10),

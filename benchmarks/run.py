@@ -14,8 +14,9 @@ import sys
 import time
 
 from . import (bench_accuracy_tradeoff, bench_complexity, bench_compression,
-               bench_decoupling, bench_equiv_ops, bench_paged_attention,
-               bench_quant, bench_serving, bench_throughput)
+               bench_decoupling, bench_equiv_ops, bench_fleet,
+               bench_paged_attention, bench_quant, bench_serving,
+               bench_throughput)
 
 RESULTS_DIR = "results"
 
@@ -41,6 +42,8 @@ ALL = {
          _smoke_out("BENCH_paged_attention_smoke.json")]),
     "quant": lambda: bench_quant.main(
         ["--smoke", "--out", _smoke_out("BENCH_quant_smoke.json")]),
+    "fleet": lambda: bench_fleet.main(
+        ["--smoke", "--out", _smoke_out("BENCH_fleet_smoke.json")]),
 }
 
 

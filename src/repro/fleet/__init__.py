@@ -1,0 +1,23 @@
+"""repro.fleet — replicated serving: health-checked engine replicas behind
+a failover router (docs/serving.md "Fleet").
+
+The paper's hardware half scales through hierarchical control — one
+top-level controller steering many identical PE blocks.  At serving scale
+the analogue is a fleet of ``ContinuousEngine`` replicas behind a
+``Router``: join-shortest-queue placement over healthy replicas, hedged
+requests for tail latency, and — the hard part — crash failover that
+migrates every lost in-flight request to a survivor via recompute-prefill
+(the same teacher-forcing mechanism local preemption uses), so greedy
+outputs stay token-identical to the B=1 oracle across a replica death.
+
+``EngineReplica`` is the RPC-shaped seam: everything the router needs is
+behind submit/step/cancel/result/salvage/drain/stats, so the ROADMAP's
+disaggregated prefill/decode split can swap a remote stub in without
+touching router logic.
+"""
+from .replica import (DEGRADED, DOWN, HEALTHY, EngineReplica, LostRequest,
+                      Salvage)
+from .router import Router
+
+__all__ = ["EngineReplica", "Router", "LostRequest", "Salvage",
+           "HEALTHY", "DEGRADED", "DOWN"]

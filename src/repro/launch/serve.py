@@ -97,6 +97,20 @@ def main(argv=None):
                          "serve (engine dispatch lanes, one lane per "
                          "request, counter tracks) to FILE; open at "
                          "https://ui.perfetto.dev")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous: serve through a replicated fleet of N "
+                         "engines behind the health-checked failover router "
+                         "(repro.fleet); telemetry gains a replica= label "
+                         "and per-replica trace lanes")
+    ap.add_argument("--router-policy", default="jsq",
+                    choices=["jsq", "round_robin"],
+                    help="with --replicas: join-shortest-queue placement "
+                         "(default) or round-robin")
+    ap.add_argument("--hedge-after", type=float, default=None,
+                    metavar="SECONDS",
+                    help="with --replicas: hedge a request to a second "
+                         "replica if its first token takes longer than this "
+                         "(default: adaptive, 4x the fleet's p99 TTFT)")
     ap.add_argument("--hardware", default="auto",
                     choices=["auto"] + sorted(HARDWARE_PRESETS),
                     help="roofline HardwareSpec the profiler attributes "
@@ -114,22 +128,40 @@ def main(argv=None):
     obs = Obs(enabled=not args.no_obs, emit_path=args.metrics_out,
               emit_every=args.metrics_every,
               hardware=resolve_hardware(args.hardware))
+    router = None
+    if args.replicas > 1 and args.engine != "continuous":
+        raise SystemExit("[launch.serve] --replicas > 1 requires "
+                         "--engine continuous")
     if args.engine == "continuous":
         reasons = servable_reasons(cfg)
         if reasons:
             raise SystemExit(f"[launch.serve] {args.arch} is not continuous-"
                              f"servable ({'; '.join(reasons)}); "
                              f"use --engine batch")
-        engine = ContinuousEngine(
-            cfg, params, max_slots=args.max_batch, max_seq=max_seq,
-            page_size=args.page_size,
-            max_tokens_in_flight=args.max_tokens_in_flight,
-            decode_chunk=args.decode_chunk, sample=args.sample,
-            seed=args.seed, eos_id=args.eos_id,
-            precompute=not args.no_precompute, paged_attn=args.paged_attn,
-            quant=quant, obs=obs, admission=args.admission,
-            max_queue=args.max_queue,
-            max_preemptions=args.max_preemptions)
+
+        def make_engine(eng_obs):
+            return ContinuousEngine(
+                cfg, params, max_slots=args.max_batch, max_seq=max_seq,
+                page_size=args.page_size,
+                max_tokens_in_flight=args.max_tokens_in_flight,
+                decode_chunk=args.decode_chunk, sample=args.sample,
+                seed=args.seed, eos_id=args.eos_id,
+                precompute=not args.no_precompute,
+                paged_attn=args.paged_attn,
+                quant=quant, obs=eng_obs, admission=args.admission,
+                max_queue=args.max_queue,
+                max_preemptions=args.max_preemptions)
+
+        if args.replicas > 1:
+            from ..fleet import EngineReplica, Router
+            pool = [EngineReplica(f"r{i}",
+                                  make_engine(obs.scoped(replica=f"r{i}")))
+                    for i in range(args.replicas)]
+            router = Router(pool, policy=args.router_policy,
+                            hedge_after_s=args.hedge_after, obs=obs,
+                            seed=args.seed)
+        else:
+            engine = make_engine(obs)
     else:
         if args.kv_dtype != "f32":
             print(f"[launch.serve] note: --kv-dtype {args.kv_dtype} applies "
@@ -149,18 +181,38 @@ def main(argv=None):
         deadline_s=args.deadline_s)
         for i in range(args.requests)]
     t0 = time.time()
-    results = engine.generate(reqs)
+    server = router if router is not None else engine
+    results = server.generate(reqs)
     dt = time.time() - t0
     toks = sum(r["decode_len"] for r in results)
     # unserved terminals (TIMEOUT/REJECTED/...) carry no prefill span
     served = [r for r in results if r.get("prefill_s") is not None]
     pre = sum(r["prefill_s"] for r in served) / max(len(served), 1)
     deco = sum(r["decode_s"] for r in served) / max(len(served), 1)
-    print(f"[launch.serve] {args.arch} ({args.engine}): {len(results)} "
+    label = (f"{args.engine} x{args.replicas}" if router is not None
+             else args.engine)
+    print(f"[launch.serve] {args.arch} ({label}): {len(results)} "
           f"requests, {toks} tokens, {dt:.2f}s ({toks / dt:.1f} tok/s; "
           f"mean prefill {pre * 1e3:.0f}ms / decode {deco * 1e3:.0f}ms)")
-    st = engine.stats()
-    if args.engine == "continuous":
+    if router is not None:
+        rs = router.stats()
+        nonzero = {s: n for s, n in rs["statuses"].items() if n}
+        print(f"[launch.serve] fleet: policy={rs['policy']} "
+              f"live={rs['live_replicas']}/{len(router.replicas)} "
+              f"placed={rs['placed']} retries={rs['place_retries']} "
+              f"hedges={rs['hedges']} failovers={rs['failovers']} "
+              f"migrated={rs['migrated_requests']} shed={rs['shed']} "
+              f"statuses={nonzero}")
+        for rep in rs["replicas"]:
+            e = rep["engine"]
+            print(f"[launch.serve]   {rep['name']}: {rep['state']} "
+                  f"served_statuses="
+                  f"{ {s: n for s, n in e['statuses'].items() if n} } "
+                  f"preempted={e['preempted']} "
+                  f"peak_pages={e['peak_pages_in_use']}")
+        router.drain()
+    st = server.stats() if router is None else None
+    if st is not None and args.engine == "continuous":
         print(f"[launch.serve] telemetry: queue_depth={st['queue_depth']} "
               f"peak_tokens_in_flight={st['peak_tokens_in_flight']} "
               f"peak_pages={st['peak_pages_in_use']}/{engine.num_pages - 1} "
@@ -184,12 +236,12 @@ def main(argv=None):
         print(f"[launch.serve] pool pressure: free_pages={st['free_pages']} "
               f"min_free_pages={st['min_free_pages']} (low-water headroom "
               f"of {engine.num_pages - 1} usable)")
-    else:
+    elif st is not None:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "
               f"prefill/decode split={st['prefill_s']:.2f}s/"
               f"{st['decode_s']:.2f}s")
-    if not args.no_obs and st.get("roofline"):
+    if not args.no_obs and st is not None and st.get("roofline"):
         print(f"[launch.serve] roofline ({st['hardware']}):")
         for kind, r in st["roofline"].items():
             if not r["dispatches"]:
@@ -199,19 +251,20 @@ def main(argv=None):
                   f"{r['achieved_bytes_per_s'] / 1e9:8.2f} GB/s  "
                   f"frac={r['roofline_frac']:.3g} ({r['bound']}-bound)")
     if args.metrics_out is not None:
-        engine.obs.close()                 # final snapshot + trailing traces
-        print(f"[launch.serve] metrics: {engine.obs.emitter.lines_written} "
+        obs.close()                        # final snapshot + trailing traces
+        print(f"[launch.serve] metrics: {obs.emitter.lines_written} "
               f"lines -> {args.metrics_out}")
     if args.trace_out is not None:
-        trace = write_trace(engine.obs, args.trace_out,
+        trace = write_trace(obs, args.trace_out,
                             extra_meta={"arch": args.arch,
-                                        "engine": args.engine})
+                                        "engine": args.engine,
+                                        "replicas": args.replicas})
         print(f"[launch.serve] chrome trace: "
               f"{len(trace['traceEvents'])} events -> {args.trace_out} "
               f"(open at https://ui.perfetto.dev)")
     if not args.no_obs:
         print("[launch.serve] obs summary:")
-        print(engine.obs.summary())
+        print(obs.summary())
 
 
 if __name__ == "__main__":

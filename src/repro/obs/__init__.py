@@ -21,15 +21,18 @@ from typing import Callable, Dict, Optional
 
 from .emit import Emitter, validate_jsonl, validate_line
 from .metrics import (BYTES_BUCKETS, RATIO_BUCKETS, SECONDS_BUCKETS,
-                      Counter, Gauge, Histogram, Registry, prometheus_text)
-from .prof import DispatchCost, Profiler, aot_compile, resolve_hardware
+                      Counter, Gauge, Histogram, Registry, ScopedRegistry,
+                      prometheus_text)
+from .prof import (DispatchCost, Profiler, ScopedProfiler, aot_compile,
+                   resolve_hardware)
 from .trace import RequestTrace, TraceStore
 
-__all__ = ["Obs", "Registry", "Counter", "Gauge", "Histogram",
-           "RequestTrace", "TraceStore", "Emitter", "validate_line",
-           "validate_jsonl", "SECONDS_BUCKETS", "BYTES_BUCKETS",
-           "RATIO_BUCKETS", "Profiler", "DispatchCost", "aot_compile",
-           "resolve_hardware", "prometheus_text"]
+__all__ = ["Obs", "Registry", "ScopedRegistry", "Counter", "Gauge",
+           "Histogram", "RequestTrace", "TraceStore", "Emitter",
+           "validate_line", "validate_jsonl", "SECONDS_BUCKETS",
+           "BYTES_BUCKETS", "RATIO_BUCKETS", "Profiler", "ScopedProfiler",
+           "DispatchCost", "aot_compile", "resolve_hardware",
+           "prometheus_text"]
 
 
 class Obs:
@@ -51,11 +54,34 @@ class Obs:
         self.profiler = Profiler(self.registry, hardware=hardware,
                                  enabled=self.enabled)
         self._t0 = time.perf_counter()
+        self._labels: Dict[str, str] = {}
+        self._owns_emitter = True
         self.emitter: Optional[Emitter] = None
         if emit_path is not None or emit_callback is not None:
             self.emitter = Emitter(self.registry, self.traces,
                                    path=emit_path, callback=emit_callback,
                                    every=emit_every, clock=self.now)
+
+    def scoped(self, **labels) -> "Obs":
+        """A labelled view sharing this Obs's clock, trace store, emitter,
+        and dispatch log — the handle each fleet replica's engine gets.
+        Metrics created through the view carry the labels (``replica=r0``),
+        traces stamp their ``replica`` field, dispatch kinds are prefixed
+        per scope, and ``close()`` on a view only flushes (the owning Obs
+        closes the shared emitter exactly once — see docs/observability.md).
+        """
+        view = Obs.__new__(Obs)
+        view.enabled = self.enabled
+        view.registry = self.registry.scoped(**labels)
+        view.traces = self.traces
+        view.profiler = ScopedProfiler(self.profiler, labels)
+        view._t0 = self._t0
+        merged = dict(self._labels)
+        merged.update({k: str(v) for k, v in labels.items()})
+        view._labels = merged
+        view._owns_emitter = False
+        view.emitter = self.emitter
+        return view
 
     def now(self) -> float:
         """Seconds on the obs clock (monotonic, 0 at Obs creation)."""
@@ -72,7 +98,8 @@ class Obs:
                     enqueue_s: float) -> Optional[RequestTrace]:
         if not self.enabled:
             return None
-        return self.traces.start(id, order, prompt_len, enqueue_s)
+        return self.traces.start(id, order, prompt_len, enqueue_s,
+                                 replica=self._labels.get("replica"))
 
     def trace_finish(self, trace: Optional[RequestTrace]) -> None:
         """Validate + complete a trace and fold its derived latencies into
@@ -96,8 +123,15 @@ class Obs:
             self.emitter.tick()
 
     def close(self) -> None:
-        if self.emitter is not None:
+        """Flush + close the emitter.  A scoped view only flushes — the
+        shared emitter belongs to the base Obs, and a replica draining must
+        not cut off its fleet-mates' telemetry."""
+        if self.emitter is None:
+            return
+        if self._owns_emitter:
             self.emitter.close()
+        else:
+            self.emitter.flush()
 
     # -- human-readable exit summary (launch/serve.py) --------------------
     def summary(self) -> str:

@@ -12,7 +12,10 @@ registry and TraceStore only aggregate:
 * **one lane per request** (process "requests"): queue → prefill →
   decode slices derived from the ``RequestTrace`` marks, preemptions as
   thread-scoped instants, terminal status + token counts as args on
-  every slice.
+  every slice.  Fleet runs label traces with their serving replica;
+  each replica's requests group under their own process
+  (``requests@r0``, ``requests@r1``, ...) so a failover migration reads
+  as the lane jumping processes.
 * **counter tracks**: free pages, queue depth, tokens in flight —
   whatever gauges the profiler was asked to ``watch()`` — sampled at
   each dispatch end.
@@ -102,8 +105,8 @@ def counter_events(profiler) -> List[Dict]:
     return events
 
 
-def request_events(trace: RequestTrace, tid: Optional[int] = None
-                   ) -> List[Dict]:
+def request_events(trace: RequestTrace, tid: Optional[int] = None,
+                   pid: int = PID_REQUESTS) -> List[Dict]:
     """One request's lane: a slice between each adjacent pair of present
     lifecycle marks, preemptions as thread-scoped instants.
 
@@ -118,19 +121,21 @@ def request_events(trace: RequestTrace, tid: Optional[int] = None
     args = {"order": trace.order, "id": trace.id,
             "status": trace.status or "FINISHED",
             "prompt_len": trace.prompt_len, "decode_len": trace.decode_len}
+    if trace.replica is not None:
+        args["replica"] = trace.replica
     # adjacent present marks; the slice is named for the phase it opens
     marks = [("queue", trace.enqueue_s), ("prefill", trace.admit_s),
              ("decode", trace.first_token_s), (None, trace.retire_s)]
     present = [(n, t) for n, t in marks if t is not None]
     events: List[Dict] = []
     for (name, t0), (_, t1) in zip(present, present[1:]):
-        events.append({"ph": "X", "pid": PID_REQUESTS, "tid": tid,
+        events.append({"ph": "X", "pid": pid, "tid": tid,
                        "name": name, "cat": "request",
                        "ts": max(t0, 0.0) * _US,
                        "dur": max(t1 - t0, 0.0) * _US,
                        "args": dict(args)})
     for t, recompute in trace.preemptions:
-        events.append({"ph": "i", "pid": PID_REQUESTS, "tid": tid,
+        events.append({"ph": "i", "pid": pid, "tid": tid,
                        "name": "preempt", "cat": "request", "s": "t",
                        "ts": max(t, 0.0) * _US,
                        "args": {"recompute_tokens": recompute}})
@@ -151,10 +156,22 @@ def build_trace(obs, extra_meta: Optional[Dict] = None) -> Dict:
         for ev in dispatch_events(prof):
             (meta if ev["ph"] == "M" else events).append(ev)
         events.extend(counter_events(prof))
+    # replica-labelled traces get their own process per replica
+    # (requests@r0 = PID_REQUESTS+1, ...); unlabelled stay on "requests"
+    replica_pids: Dict[str, int] = {}
     for trace in obs.traces.completed:
-        meta.extend(_meta(PID_REQUESTS, f"req {trace.order}",
+        if trace.replica is None:
+            pid = PID_REQUESTS
+        else:
+            pid = replica_pids.get(trace.replica)
+            if pid is None:
+                pid = PID_REQUESTS + 1 + len(replica_pids)
+                replica_pids[trace.replica] = pid
+                meta.extend(_meta(pid, f"requests@{trace.replica}",
+                                  sort=pid - 1))
+        meta.extend(_meta(pid, f"req {trace.order}",
                           tid=trace.order, sort=trace.order))
-        events.extend(request_events(trace))
+        events.extend(request_events(trace, pid=pid))
     events.sort(key=lambda e: e["ts"])
     out = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
     if prof is not None:
@@ -218,8 +235,8 @@ def main(argv=None) -> int:
     with open(args.validate) as f:
         trace = json.load(f)
     validate_trace(trace)
-    lanes = {ev.get("tid") for ev in trace["traceEvents"]
-             if ev.get("pid") == PID_REQUESTS and ev.get("ph") == "X"}
+    lanes = {(ev.get("pid"), ev.get("tid")) for ev in trace["traceEvents"]
+             if ev.get("cat") == "request" and ev.get("ph") == "X"}
     if len(lanes) < args.min_requests:
         raise SystemExit(f"{args.validate}: {len(lanes)} request lanes "
                          f"< required {args.min_requests}")

@@ -38,7 +38,7 @@ SNAPSHOT_KEYS = ("type", "seq", "t_s", "counters", "gauges", "histograms")
 TRACE_KEYS = ("type", "t_s", "id", "order", "prompt_len", "decode_len",
               "status", "enqueue_s", "admit_s", "first_token_s", "retire_s",
               "queue_s", "ttft_s", "prefill_s", "decode_s", "tpot_s",
-              "latency_s", "chunks", "preemptions")
+              "latency_s", "chunks", "preemptions", "replica")
 
 # Terminal statuses a trace line may carry (serve/scheduler.py defines the
 # canonical constants; the emitter validates against the same literals —
@@ -67,6 +67,7 @@ class Emitter:
         self.seq = 0
         self.lines_written = 0
         self._file = None
+        self._closed = False
 
     # -- sink -------------------------------------------------------------
     def _write(self, obj: Dict) -> None:
@@ -81,12 +82,16 @@ class Emitter:
     # -- cadence ----------------------------------------------------------
     def tick(self) -> None:
         """Engine heartbeat: flush every ``every``-th call."""
+        if self._closed:
+            return
         self.ticks += 1
         if self.ticks % self.every == 0:
             self.flush()
 
     def flush(self) -> None:
         """One snapshot line + all traces completed since the last flush."""
+        if self._closed:
+            return
         t = self.clock()
         snap = {"type": "snapshot", "seq": self.seq, "t_s": t}
         snap.update(self.registry.snapshot())
@@ -98,7 +103,13 @@ class Emitter:
             self._file.flush()
 
     def close(self) -> None:
+        """Final flush, then stop.  Idempotent: a second close (or a tick/
+        flush after close — e.g. ``drain()`` called twice) is a no-op
+        instead of reopening the file for a duplicate trailing snapshot."""
+        if self._closed:
+            return
         self.flush()
+        self._closed = True
         if self._file is not None:
             self._file.close()
             self._file = None

@@ -236,6 +236,69 @@ class Registry:
         (see ``prometheus_text``)."""
         return prometheus_text(self.snapshot())
 
+    def scoped(self, **labels) -> "ScopedRegistry":
+        """A label-scoped view over this registry: every counter/gauge/
+        histogram created through the view carries ``labels`` merged into
+        its identity.  This is the per-engine metrics-isolation seam — two
+        ``ContinuousEngine``s sharing one registry get distinct
+        ``tokens{replica=r0}`` / ``tokens{replica=r1}`` series instead of
+        cross-contaminating one unlabeled counter (docs/observability.md)."""
+        return ScopedRegistry(self, labels)
+
+
+class ScopedRegistry:
+    """Thin label-injecting facade over a base ``Registry``.
+
+    Producers written against the Registry surface (``counter`` /
+    ``gauge`` / ``histogram`` / ``value``) work unchanged; the fixed
+    labels are merged under any call-site labels (call-site wins on key
+    collision, so a scoped producer can still override deliberately).
+    Views (``items`` / ``snapshot`` / ``delta`` / ``to_prometheus``)
+    delegate to the base registry — the snapshot is the whole process,
+    which is what the emitter wants.  Scopes nest: ``scoped()`` on a view
+    merges further labels.
+    """
+
+    def __init__(self, base: "Registry", labels: Dict[str, object]):
+        self.base = base
+        self.labels: Dict[str, str] = {k: str(v) for k, v in labels.items()}
+
+    def _merged(self, labels: Dict[str, object]) -> Dict[str, str]:
+        merged = dict(self.labels)
+        merged.update({k: str(v) for k, v in labels.items()})
+        return merged
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self.base.counter(name, **self._merged(labels))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self.base.gauge(name, **self._merged(labels))
+
+    def histogram(self, name: str, bounds: Sequence[float] = SECONDS_BUCKETS,
+                  **labels) -> Histogram:
+        return self.base.histogram(name, bounds=bounds,
+                                   **self._merged(labels))
+
+    def value(self, name: str, **labels) -> float:
+        return self.base.value(name, **self._merged(labels))
+
+    def scoped(self, **labels) -> "ScopedRegistry":
+        return ScopedRegistry(self.base, self._merged(labels))
+
+    # whole-process views (the emitter snapshots everything)
+    def items(self):
+        return self.base.items()
+
+    def snapshot(self) -> Dict:
+        return self.base.snapshot()
+
+    @staticmethod
+    def delta(new: Dict, old: Dict) -> Dict:
+        return Registry.delta(new, old)
+
+    def to_prometheus(self) -> str:
+        return self.base.to_prometheus()
+
 
 # ---------------------------------------------------------------------------
 # Prometheus text exposition (no client library — the format is 14 lines)

@@ -197,6 +197,65 @@ class Profiler:
         return out
 
 
+class ScopedProfiler:
+    """Label-scoped facade over a shared ``Profiler`` (``Obs.scoped``).
+
+    A fleet of engines shares one profiler (one dispatch log, one Chrome
+    trace) but each engine's view prefixes its dispatch *kinds*
+    (``r0:decode_chunk``) and labels its watched gauges, so per-replica
+    attribution falls out of the same machinery single-engine serving
+    uses.  ``summary()`` filters to this scope's kinds — a replica's
+    ``stats()['roofline']`` shows only its own dispatches.
+    """
+
+    def __init__(self, base: Profiler, labels: Dict[str, str]):
+        self.base = base
+        self.labels = {k: str(v) for k, v in labels.items()}
+        self.prefix = ",".join(v for _, v in sorted(self.labels.items()))
+
+    @property
+    def spec(self) -> HardwareSpec:
+        return self.base.spec
+
+    @property
+    def enabled(self) -> bool:
+        return self.base.enabled
+
+    @property
+    def events(self):
+        return self.base.events
+
+    @property
+    def costs(self):
+        return self.base.costs
+
+    @property
+    def samples(self):
+        return self.base.samples
+
+    def _kind(self, kind: str) -> str:
+        return f"{self.prefix}:{kind}" if self.prefix else kind
+
+    def register(self, kind: str, compiled) -> DispatchCost:
+        return self.base.register(self._kind(kind), compiled)
+
+    def watch(self, name: str, **labels) -> None:
+        merged = dict(self.labels)
+        merged.update({k: str(v) for k, v in labels.items()})
+        self.base.watch(name, **merged)
+
+    def on_dispatch(self, cost: Optional[DispatchCost], t0_s: float,
+                    t1_s: float) -> None:
+        self.base.on_dispatch(cost, t0_s, t1_s)
+
+    def summary(self) -> Dict[str, Dict]:
+        if not self.prefix:
+            return self.base.summary()
+        pre = self.prefix + ":"
+        return {k[len(pre):]: v for k, v in self.base.summary().items()
+                if k.startswith(pre)}
+
+
 # ---------------------------------------------------------------------------
 # AOT capture: compile once, profile forever
 # ---------------------------------------------------------------------------

@@ -56,6 +56,10 @@ class RequestTrace:
     # (t_s, recompute_tokens) per preemption: the request was evicted and
     # re-queued with recompute_tokens to teacher-force through prefill
     preemptions: List = dataclasses.field(default_factory=list)
+    # owning replica name (repro.fleet); None = single-engine serve.  Orders
+    # are unique per ENGINE, so (replica, order) is the fleet-wide trace key
+    # and the Chrome-trace exporter groups request lanes per replica pid.
+    replica: Optional[str] = None
 
     # -- lifecycle marks --------------------------------------------------
     def mark_admit(self, t: float) -> None:
@@ -159,6 +163,7 @@ class RequestTrace:
             "latency_s": self.latency_s,
             "chunks": [list(c) for c in self.chunks],
             "preemptions": [list(p) for p in self.preemptions],
+            "replica": self.replica,
         }
 
 
@@ -173,23 +178,27 @@ class TraceStore:
     """
 
     def __init__(self, max_completed: int = 100_000):
-        self.active: Dict[int, RequestTrace] = {}
+        # keyed (replica, order): a fleet shares one store and every
+        # replica's engine numbers its own submissions from zero
+        self.active: Dict[tuple, RequestTrace] = {}
         self.completed: Deque[RequestTrace] = deque(maxlen=max_completed)
         self._pending: Deque[RequestTrace] = deque(maxlen=max_completed)
 
     def start(self, id: int, order: int, prompt_len: int,
-              enqueue_s: float) -> RequestTrace:
+              enqueue_s: float, replica: Optional[str] = None
+              ) -> RequestTrace:
         tr = RequestTrace(id=id, order=order, prompt_len=prompt_len,
-                          enqueue_s=float(enqueue_s))
-        self.active[order] = tr
+                          enqueue_s=float(enqueue_s), replica=replica)
+        self.active[(replica, order)] = tr
         return tr
 
-    def get(self, order: int) -> Optional[RequestTrace]:
-        return self.active.get(order)
+    def get(self, order: int,
+            replica: Optional[str] = None) -> Optional[RequestTrace]:
+        return self.active.get((replica, order))
 
     def finish(self, trace: RequestTrace) -> RequestTrace:
         trace.validate()
-        self.active.pop(trace.order, None)
+        self.active.pop((trace.replica, trace.order), None)
         self.completed.append(trace)
         self._pending.append(trace)
         return trace

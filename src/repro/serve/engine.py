@@ -83,6 +83,9 @@ class Request:
     # the continuous engine both in-queue and in-flight — the batch engine
     # ignores it (its whole batch is one dispatch; see docs/serving.md).
     deadline_s: Optional[float] = None
+    # shedding priority (repro.fleet): lower sheds first when the fleet is
+    # saturated.  Engines ignore it — admission stays strictly FIFO.
+    priority: int = 0
 
 
 class Engine:
@@ -511,17 +514,45 @@ class ContinuousEngine:
             self._t0_perf = time.perf_counter()
         return time.perf_counter() - self._t0_perf
 
-    def submit(self, request: Request, arrival_s: float = 0.0) -> int:
+    def reset_serve_clock(self) -> None:
+        """Re-anchor the serve clock at the next submit/step.  A fleet
+        replica calls this when adopting a (possibly warmed) engine:
+        arrival and deadline stamps are router-relative, and an engine
+        whose clock still counts from a warmup ``generate`` would see
+        every stamp seconds in the past and expire fresh deadlines on
+        arrival.  Only legal while idle — in-flight work carries absolute
+        stamps on the current clock."""
+        if not self.scheduler.idle:
+            raise RuntimeError("reset_serve_clock with work in flight")
+        self._t0_perf = None
+
+    def submit(self, request: Request, arrival_s: float = 0.0, *,
+               resume_tokens: Optional[Sequence[int]] = None,
+               preemptions: int = 0) -> int:
         """Queue one request; returns its order (the key for results).
 
         A rejected submission (queue bound hit / draining) still gets an
         order and an immediate REJECTED terminal result — callers never
-        lose a request."""
+        lose a request.
+
+        ``resume_tokens`` re-enters a request mid-stream (cross-replica
+        failover migration, repro.fleet): the tokens are teacher-forced
+        through recompute-prefill exactly like a local preemption's
+        resume, so greedy decode stays token-identical to the B=1 oracle.
+        ``preemptions`` carries the request's eviction count across the
+        migration for honest end-to-end accounting."""
         if len(request.prompt) > self.max_seq:
             raise ValueError(f"prompt length {len(request.prompt)} exceeds "
                              f"max_seq {self.max_seq}")
+        resume = list(resume_tokens) if resume_tokens else []
+        if len(request.prompt) + len(resume) > self.max_seq:
+            raise ValueError(
+                f"prompt + resume length {len(request.prompt) + len(resume)} "
+                f"exceeds max_seq {self.max_seq}")
         self._now()                          # pin the serve clock
-        order, accepted = self.scheduler.submit(request, arrival_s)
+        order, accepted = self.scheduler.submit(request, arrival_s,
+                                                resume_tokens=resume,
+                                                preemptions=preemptions)
         if self.obs.enabled:
             # a request ENQUEUES at its (possibly simulated) arrival — the
             # trace timeline starts there so queue_s covers admission wait
@@ -529,7 +560,8 @@ class ContinuousEngine:
                 request.id, order, len(request.prompt),
                 self.obs.rebase(self._t0_perf) + arrival_s)
         if not accepted:
-            self._finish_unserved(order, request, [], REJECTED)
+            self._finish_unserved(order, request, resume, REJECTED,
+                                  preemptions=preemptions)
         return order
 
     def cancel(self, request_id) -> bool:
@@ -583,6 +615,12 @@ class ContinuousEngine:
         """Terminal result for a submission order (None while in flight)."""
         return (self._results.pop(order, None) if pop
                 else self._results.get(order))
+
+    @property
+    def anomalies(self) -> int:
+        """Cumulative NaN/Inf-guard trips — the health signal
+        ``fleet.EngineReplica`` folds into its DEGRADED transitions."""
+        return int(self._c_anom.value)
 
     # -- serving loop -----------------------------------------------------
     def generate(self, reqs: Sequence[Request],

@@ -62,6 +62,10 @@ class FaultConfig:
     dispatch_delay_p: float = 0.0      # per decode dispatch
     dispatch_delay_s: float = 0.0      # injected sleep when it fires
     corrupt_p: float = 0.0             # per decode dispatch
+    # replica-level faults (consulted by fleet.EngineReplica.step)
+    crash_p: float = 0.0               # per replica step: hard crash (DOWN)
+    hang_p: float = 0.0                # per replica step: wedge the step...
+    hang_s: float = 0.0                # ...for this long (heartbeat stalls)
 
 
 class FaultInjector:
@@ -80,6 +84,8 @@ class FaultInjector:
         self.alloc_failures = 0
         self.delays = 0
         self.corruptions = 0
+        self.crashes = 0
+        self.hangs = 0
         self.corrupted_ids: set = set()
 
     def alloc_fault(self, n: int) -> bool:
@@ -116,12 +122,33 @@ class FaultInjector:
         self.corruptions += 1
         return slot
 
+    def maybe_crash(self) -> bool:
+        """Replica hook: True crashes the replica on this step (DOWN)."""
+        if self.cfg.crash_p <= 0.0:
+            return False
+        if self.rng.random_sample() < self.cfg.crash_p:
+            self.crashes += 1
+            return True
+        return False
+
+    def hang_delay(self) -> float:
+        """Replica hook: seconds this step wedges for (0 = no hang).  The
+        replica's heartbeat stalls, feeding its step-timeout machinery."""
+        if self.cfg.hang_p <= 0.0 or self.cfg.hang_s <= 0.0:
+            return 0.0
+        if self.rng.random_sample() < self.cfg.hang_p:
+            self.hangs += 1
+            return self.cfg.hang_s
+        return 0.0
+
     def stats(self) -> Dict:
         return {
             "seed": self.cfg.seed,
             "alloc_failures": self.alloc_failures,
             "delays": self.delays,
             "corruptions": self.corruptions,
+            "crashes": self.crashes,
+            "hangs": self.hangs,
             "corrupted_ids": sorted(self.corrupted_ids),
         }
 
@@ -308,19 +335,236 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
     return summary
 
 
+# ---------------------------------------------------------------------------
+# Fleet chaos: replica crash mid-serving, failover via recompute migration
+# ---------------------------------------------------------------------------
+def run_fleet_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
+                    requests: int = 16, replicas: int = 2,
+                    cancel_p: float = 0.04,
+                    metrics_out: Optional[str] = None,
+                    verbose: bool = True) -> Dict:
+    """Serve a chaos workload through a replicated fleet, kill one replica
+    mid-serving, and assert the fleet-level invariants:
+
+    1. every fleet request reaches EXACTLY ONE terminal status (hedged
+       legs, salvaged results, and migrated resubmissions never
+       double-settle or drop a request);
+    2. zero lost requests — the dead replica's queue entries and running
+       slots all resurface as fleet terminals on a survivor;
+    3. every SURVIVOR's page pool is fully restored (no leaks; all-trash
+       block table; no tokens in flight) — the victim's pool is abandoned
+       by design;
+    4. FINISHED requests are token-identical to the B=1 oracle — including
+       requests that migrated across the crash (recompute-prefill on the
+       survivor must be invisible) — and partial terminals are an oracle
+       prefix.  The suite additionally requires that migration actually
+       happened and that at least one MIGRATED request finished.
+
+    The kill is deterministic-by-construction: once the victim has a
+    running slot with generated tokens and the fleet has settled at least
+    one request, the victim's ``crash_p`` is armed to 1.0 and its next
+    step crashes (exercising the injected-crash path, mid-serving).  One
+    survivor carries a seeded hang fault sized above its step timeout, so
+    the DEGRADED/recovery health transitions run under load too.
+    """
+    import jax
+
+    from ..configs import registry as config_registry
+    from ..fleet import DOWN, EngineReplica, Router
+    from ..models.registry import build_model
+    from ..obs import Obs
+    from .engine import ContinuousEngine, Engine
+
+    if replicas < 2:
+        raise ValueError("fleet chaos needs >= 2 replicas (one dies)")
+    cfg = config_registry.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq = 64
+    # looser deadlines than single-engine chaos: migrated requests must
+    # have room to finish on the survivor, or parity has nothing to bite on
+    reqs, arrivals = make_chaos_workload(
+        requests, vocab=cfg.vocab_size, seed=seed,
+        deadline_frac=0.2, deadline_choices=(0.4, 5.0))
+
+    oracle_eng = Engine(cfg, params, max_batch=1, max_seq=max_seq)
+    oracle = {r.id: oracle_eng.generate(
+        [dataclasses.replace(r, deadline_s=None)])[0]["tokens"]
+        for r in reqs}
+
+    obs = (Obs(emit_path=metrics_out, emit_every=5)
+           if metrics_out else Obs())
+    pool: List[EngineReplica] = []
+    free0: Dict[str, int] = {}
+    for i in range(replicas):
+        name = f"r{i}"
+        # alloc faults keep preemption/recompute hot on every replica;
+        # replica 1 also hangs occasionally (hang_s > its step timeout)
+        # to drive the DEGRADED <-> HEALTHY transitions under load
+        fcfg = FaultConfig(seed=seed * 101 + i, alloc_fail_p=0.05,
+                           hang_p=0.03 if i == 1 else 0.0, hang_s=0.004)
+        inj = FaultInjector(fcfg)
+        eng = ContinuousEngine(
+            cfg, params, max_slots=4, max_seq=max_seq, page_size=8,
+            num_pages=9, decode_chunk=4, obs=obs.scoped(replica=name),
+            admission="optimistic", max_queue=requests, max_preemptions=4,
+            faults=inj)
+        rep = EngineReplica(
+            name, eng, faults=inj,
+            step_timeout_s=0.003 if i == 1 else 5.0,
+            down_after=10 ** 9 if i == 1 else 3, recover_after=2)
+        pool.append(rep)
+        free0[name] = eng.block_table.allocator.available
+    router = Router(pool, policy="jsq", seed=seed, obs=obs)
+    victim = pool[0]
+
+    rng = np.random.RandomState(seed + 1)
+    orders = {}
+    for r, a in zip(reqs, arrivals):
+        orders[r.id] = router.submit(r, a)
+    live = set(orders)
+    killed = False
+    steps = 0
+    while any(router.result(o) is None for o in orders.values()):
+        steps += 1
+        if not router.step():
+            time.sleep(0.001)
+        if not killed and victim.state != DOWN:
+            mid_serving = any(s.tokens
+                              for s in victim.engine.scheduler.running)
+            settled = sum(1 for o in orders.values()
+                          if router.result(o) is not None)
+            if mid_serving and settled >= 1:
+                # arm the injected crash: the victim's next step dies with
+                # requests running and tokens already generated
+                victim.faults.cfg.crash_p = 1.0
+                killed = True
+        live = {i for i in live if router.result(orders[i]) is None}
+        if live and rng.random_sample() < cancel_p:
+            router.cancel(int(rng.choice(sorted(live))))
+        if steps > 100_000:
+            raise AssertionError("fleet chaos did not converge")
+    router.drain()
+    assert killed, ("kill never armed: the victim finished its share "
+                    "before serving mid-flight (grow the workload)")
+    assert victim.state == DOWN and victim.salvaged, (
+        f"victim {victim.name} state={victim.state} "
+        f"salvaged={victim.salvaged}")
+    survivors = [rep for rep in pool if rep is not victim]
+    assert all(rep.state != DOWN for rep in survivors), (
+        f"survivor died: {[rep.stats() for rep in survivors]}")
+
+    # -- invariant 1: exactly one terminal per fleet request --------------
+    results = {i: router.result(o) for i, o in orders.items()}
+    missing = [i for i, res in results.items() if res is None]
+    assert not missing, f"lost requests (no terminal): {missing}"
+    bad = {i: res["status"] for i, res in results.items()
+           if res["status"] not in sched_mod.TERMINAL_STATUSES}
+    assert not bad, f"non-terminal statuses: {bad}"
+    term_counts = router.terminal_counts()
+    assert sum(term_counts.values()) == len(reqs), (
+        f"fleet terminal transitions {term_counts} != {len(reqs)} "
+        f"requests (double-settle or drop)")
+
+    # -- invariant 2: survivors' pools fully restored ---------------------
+    for rep in survivors:
+        alloc = rep.engine.block_table.allocator
+        assert alloc.available == free0[rep.name], (
+            f"{rep.name}: page leak "
+            f"({free0[rep.name] - alloc.available} pages missing)")
+        assert alloc.in_use == 0, rep.name
+        assert (rep.engine.block_table.table == 0).all(), (
+            f"{rep.name}: block table not all-trash")
+        assert rep.engine.scheduler.tokens_in_flight == 0, rep.name
+
+    # -- invariant 3: migration happened and finished ---------------------
+    migrated = {i for i, res in results.items() if res["migrations"] > 0}
+    assert migrated, "replica died mid-serving but nothing migrated"
+    migrated_finished = {
+        i for i in migrated
+        if results[i]["status"] in sched_mod.FINISHED_STATUSES}
+    assert migrated_finished, (
+        f"no migrated request finished (migrated={sorted(migrated)}, "
+        f"statuses={ {i: results[i]['status'] for i in migrated} })")
+
+    # -- invariant 4: oracle parity, including across the migration -------
+    corrupted = set()
+    for rep in pool:
+        corrupted |= rep.engine.faults.corrupted_ids if rep.engine.faults \
+            else set()
+    mismatches = []
+    for r in reqs:
+        if r.id in corrupted:
+            continue
+        res = results[r.id]
+        want = oracle[r.id]
+        got = res["tokens"]
+        if res["status"] in sched_mod.FINISHED_STATUSES:
+            if got != want:
+                mismatches.append(
+                    (r.id, res["migrations"],
+                     f"tokens {got} != oracle {want}"))
+        elif got and got != want[:len(got)]:
+            mismatches.append(
+                (r.id, res["migrations"], f"prefix {got} != oracle {want}"))
+    assert not mismatches, f"oracle divergence: {mismatches}"
+
+    if metrics_out:
+        from ..obs.emit import validate_jsonl
+        validate_jsonl(metrics_out)
+
+    summary = {
+        "arch": arch,
+        "seed": seed,
+        "requests": len(reqs),
+        "replicas": replicas,
+        "steps": steps,
+        "statuses": term_counts,
+        "migrated": sorted(migrated),
+        "migrated_finished": sorted(migrated_finished),
+        "router": router.stats(),
+    }
+    if verbose:
+        rs = summary["router"]
+        print(f"[fleet-chaos] seed={seed} arch={arch}: OK — "
+              f"{len(reqs)} requests over {replicas} replicas, "
+              f"victim={victim.name} down ({victim.down_reason}), "
+              f"statuses={term_counts}, migrated={sorted(migrated)}, "
+              f"hedges={rs['hedges']}, shed={rs['shed']}")
+    return summary
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        description="Chaos invariant suite for the continuous engine "
-                    "(seeded fault injection; CI `chaos` step).")
+        description="Chaos invariant suites (seeded fault injection; CI "
+                    "`chaos` and `fleet` steps).")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="workload size (default: 24 single-engine, "
+                         "16 fleet)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the replicated-fleet chaos suite (replica "
+                         "crash + failover migration) instead of the "
+                         "single-engine suite")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet size for --fleet (one replica is killed)")
     ap.add_argument("--metrics-out", default=None,
                     help="also emit obs JSONL and validate it")
     args = ap.parse_args(argv)
     try:
-        run_chaos(arch=args.arch, seed=args.seed, requests=args.requests,
-                  metrics_out=args.metrics_out)
+        if args.fleet:
+            run_fleet_chaos(arch=args.arch, seed=args.seed,
+                            requests=(16 if args.requests is None
+                                      else args.requests),
+                            replicas=args.replicas,
+                            metrics_out=args.metrics_out)
+        else:
+            run_chaos(arch=args.arch, seed=args.seed,
+                      requests=(24 if args.requests is None
+                                else args.requests),
+                      metrics_out=args.metrics_out)
     except AssertionError as e:
         print(f"[chaos] FAILED: {e}", file=sys.stderr)
         return 1

@@ -177,14 +177,23 @@ class Scheduler:
         return {s: int(c.value) for s, c in self._c_term.items()}
 
     # -- queue ------------------------------------------------------------
-    def submit(self, request, arrival_s: float = 0.0
-               ) -> Tuple[int, bool]:
+    def submit(self, request, arrival_s: float = 0.0,
+               resume_tokens: Optional[List[int]] = None,
+               preemptions: int = 0) -> Tuple[int, bool]:
         """Queue a request; returns ``(order, accepted)``.
 
         ``accepted`` is False when intake is closed (drain) or the bounded
         queue is full — the caller owns surfacing the REJECTED terminal
         (the counter is bumped here; orders stay unique either way).
         Deadlines are absolute: ``arrival_s + request.deadline_s``.
+
+        ``resume_tokens`` submits the request as a RESUME entry — tokens it
+        already generated elsewhere are teacher-forced through prefill
+        exactly like a local preemption's recompute, so greedy decode
+        continues token-identically.  This is the cross-replica failover
+        migration seam (repro.fleet): a request salvaged from a crashed
+        replica re-enters a survivor mid-stream.  Resume entries survive
+        ``flush_queue`` (they are in-flight work, not fresh queue).
         """
         order = self.submitted
         self._c_submitted.inc()
@@ -195,7 +204,9 @@ class Scheduler:
         rel = getattr(request, "deadline_s", None)
         self.queue.append(QueueEntry(
             order=order, request=request, arrival_s=arrival_s,
-            deadline_s=None if rel is None else arrival_s + float(rel)))
+            deadline_s=None if rel is None else arrival_s + float(rel),
+            resume_tokens=list(resume_tokens) if resume_tokens else [],
+            preemptions=int(preemptions)))
         self._g_queue.set(len(self.queue))
         return order, True
 

@@ -248,6 +248,75 @@ def test_cancel_and_drain(tiny_setup):
     assert sum(st["statuses"].values()) == 3
 
 
+def test_drain_idempotent(tiny_setup):
+    """drain() is safe to call twice: the second call finds a closed
+    intake and an idle scheduler, returns nothing, and leaves the results
+    poppable exactly once."""
+    cfg, params = tiny_setup
+    reqs = _reqs([(12, 6), (12, 6)])
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=4,
+                           decode_chunk=2)
+    orders = [eng.submit(r) for r in reqs]
+    eng.step()                              # both admitted + prefilled
+    first = eng.drain()
+    assert sorted(r["status"] for r in first) == ["FINISHED_BUDGET"] * 2
+    assert eng.drain() == []                # idempotent: nothing new, no raise
+    for o in orders:
+        assert eng.result(o, pop=True)["status"] == "FINISHED_BUDGET"
+        assert eng.result(o) is None        # popped exactly once
+    st = eng.stats()
+    assert st["pages_in_use"] == 0 and st["queue_depth"] == 0
+    # a drained engine refuses new work instead of losing it
+    o2 = eng.submit(_reqs([(8, 4)], seed=3)[0])
+    assert eng.result(o2)["status"] == "REJECTED"
+
+
+def test_cancel_preempted_resume_entry(tiny_setup):
+    """Cancel a request while it sits in the queue as a RESUME entry
+    (preempted mid-decode, waiting to recompute-prefill): it settles
+    CANCELLED carrying the oracle-prefix tokens it had already generated,
+    and the survivor still matches its oracle run."""
+    cfg, params = tiny_setup
+    reqs = _reqs([(16, 12), (14, 12), (15, 10)])
+    oracle = Engine(cfg, params, max_batch=1, max_seq=32)
+    want = [oracle.generate([r])[0]["tokens"] for r in reqs]
+    # same undersized pool as test_preemption_parity_small_pool: decode-time
+    # growth must preempt the younger slot back to the queue
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=4,
+                           num_pages=9, decode_chunk=4)
+    orders = [eng.submit(r) for r in reqs]
+    victim = None
+    for _ in range(200):
+        eng.step()
+        resumed = [e for e in eng.scheduler.queue if e.resume_tokens]
+        if resumed:
+            victim = resumed[0]
+            break
+    assert victim is not None, "pool never preempted a request to the queue"
+    vid = victim.request.id
+    assert eng.cancel(vid)
+    res = eng.result(orders[vid])
+    assert res["status"] == "CANCELLED"
+    assert res["preemptions"] >= 1
+    assert res["tokens"] == want[vid][:len(res["tokens"])]   # oracle prefix
+    assert 0 < len(res["tokens"]) < len(want[vid])
+    # run the survivors to terminal before draining: drain() sheds
+    # still-fresh queue entries as REJECTED, and whether the last request
+    # was admitted yet when the preemption fired is scheduling-dependent
+    while eng.step():
+        pass
+    eng.drain()
+    for i, o in enumerate(orders):
+        if i == vid:
+            continue
+        out = eng.result(o)
+        assert out["status"] in ("FINISHED_BUDGET", "FINISHED_EOS")
+        assert out["tokens"] == want[i]
+    st = eng.stats()
+    assert st["pages_in_use"] == 0 and st["tokens_in_flight"] == 0
+    assert sum(st["statuses"].values()) == len(reqs)
+
+
 def test_bounded_queue_rejects_at_submit(tiny_setup):
     cfg, params = tiny_setup
     reqs = _reqs([(12, 4), (12, 4)])

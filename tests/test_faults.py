@@ -118,3 +118,15 @@ def test_chaos_suite_smoke(tmp_path):
     summary = run_chaos(seed=0, requests=10, metrics_out=out, verbose=False)
     assert summary["requests"] == 10
     assert sum(summary["statuses"].values()) == 10
+
+
+def test_fleet_chaos_smoke(tmp_path):
+    from repro.serve.faults import run_fleet_chaos
+    out = str(tmp_path / "fleet_chaos.jsonl")
+    summary = run_fleet_chaos(seed=0, requests=10, metrics_out=out,
+                              verbose=False)
+    assert summary["requests"] == 10 and summary["replicas"] == 2
+    assert sum(summary["statuses"].values()) == 10    # exactly-once, none lost
+    assert summary["migrated"]                        # crash forced migration
+    assert summary["migrated_finished"]
+    assert summary["router"]["live_replicas"] == 1    # the victim stayed dead

@@ -394,3 +394,67 @@ def test_continuous_emitter_end_to_end(setup, tmp_path):
     assert "sched.queue_depth" in snaps[-1]["gauges"]
     assert "pool.free_pages" in snaps[-1]["gauges"]
     assert snaps[-1]["histograms"]["trace.ttft_s"]["count"] == 4
+
+
+# -- label-scoped views (the fleet's metrics-isolation seam) ---------------
+
+def test_scoped_registry_labels_and_nesting():
+    """Scoped views inject their labels into every metric identity, nest
+    by merging, and never create unlabeled twins."""
+    reg = Registry()
+    r0 = reg.scoped(replica="r0")
+    r0.counter("sched.submitted").inc(3)
+    reg.scoped(replica="r1").counter("sched.submitted").inc(5)
+    assert reg.value("sched.submitted", replica="r0") == 3
+    assert reg.value("sched.submitted", replica="r1") == 5
+    with pytest.raises(KeyError):           # no unlabeled bleed-through
+        reg.value("sched.submitted")
+    nested = r0.scoped(shard="s2")
+    nested.gauge("pool.free_pages").set(7)
+    assert reg.value("pool.free_pages", replica="r0", shard="s2") == 7
+    # same (name, labels) through base or view is the same object
+    assert reg.counter("sched.submitted", replica="r0") is \
+        r0.counter("sched.submitted")
+
+
+def test_scoped_registry_call_site_wins_on_collision():
+    """A call-site label overrides the scope's fixed label of the same
+    key — scoped producers can still re-attribute deliberately."""
+    reg = Registry()
+    view = reg.scoped(replica="r0")
+    view.counter("fleet.handoffs", replica="r9").inc()
+    assert reg.value("fleet.handoffs", replica="r9") == 1
+    with pytest.raises(KeyError):
+        reg.value("fleet.handoffs", replica="r0")
+
+
+def test_scoped_obs_shares_clock_traces_and_emitter(tmp_path):
+    """Obs.scoped: shared clock/trace store/emitter; view.close() only
+    flushes, the owning Obs closes the shared emitter exactly once."""
+    path = str(tmp_path / "fleet.jsonl")
+    root = Obs(emit_path=path, emit_every=1)
+    v0, v1 = root.scoped(replica="r0"), root.scoped(replica="r1")
+    assert v0.emitter is root.emitter and v1.emitter is root.emitter
+    assert abs(v0.now() - root.now()) < 0.05        # one clock
+    t0 = v0.trace_start(id=0, order=0, prompt_len=4, enqueue_s=v0.now())
+    t1 = v1.trace_start(id=0, order=0, prompt_len=4, enqueue_s=v1.now())
+    assert t0.replica == "r0" and t1.replica == "r1"
+    # (replica, order) keying: same local order, distinct active entries
+    assert root.traces.get(0, replica="r0") is t0
+    assert root.traces.get(0, replica="r1") is t1
+    for tr, v in ((t0, v0), (t1, v1)):
+        tr.mark_admit(v.now())
+        tr.mark_first_token(v.now())
+        tr.status = "FINISHED_EOS"
+        tr.mark_retire(v.now())
+        v.trace_finish(tr)
+    v0.close()                              # flush only — emitter stays open
+    assert root.emitter is not None and not root.emitter._closed
+    v1.close()
+    root.close()
+    root.close()                            # owning close is idempotent
+    counts = validate_jsonl(path)
+    assert counts["trace"] == 2
+    lines = [json.loads(l) for l in open(path)]
+    assert {t["replica"] for t in lines if t["type"] == "trace"} == \
+        {"r0", "r1"}

@@ -489,3 +489,108 @@ if HAVE_HYPOTHESIS:
             slots, page, maxp,
             n_requests=data.draw(st.integers(1, 8)),
             n_events=data.draw(st.integers(1, 40)))
+
+
+# ---------------------------------------------------------------------------
+# Fleet lifecycle state machine: the router over host-only fake replicas
+# under random interleavings of submit / step / tick / cancel / replica
+# kill — with hedging armed and migration-by-resume on every kill.  Every
+# fleet request must settle EXACTLY ONCE, counters must agree with the
+# settled statuses, and any tokens delivered must be the fakes'
+# deterministic stream (resume/hedge/migration never fork it).
+# ---------------------------------------------------------------------------
+def _fleet_machine(draw, n_replicas, n_requests, n_events):
+    from repro.fleet import DOWN, Router
+    from repro.serve.scheduler import TERMINAL_STATUSES
+    from test_fleet import FakeReplica
+
+    now = [0.0]
+    # max_queue >= 1: a replica that refuses EVERY submit forever would
+    # livelock the workload itself (real engines always have some intake)
+    reps = [FakeReplica(f"f{i}", capacity=draw(1, 2),
+                        max_queue=draw(1, 3))
+            for i in range(n_replicas)]
+    router = Router(reps, policy=("jsq", "round_robin")[draw(0, 1)],
+                    hedge_after_s=0.3, backoff_base_s=0.01,
+                    backoff_cap_s=0.1,
+                    max_pending=draw(1, 2 * n_replicas + 2),
+                    seed=draw(0, 99), clock=lambda: now[0])
+    orders = {}
+    next_rid = [0]
+
+    def do_submit():
+        if next_rid[0] >= n_requests:
+            return
+        rid = next_rid[0]
+        next_rid[0] += 1
+        r = Request(prompt=np.arange(draw(1, 6), dtype=np.int32) + 1,
+                    max_new_tokens=draw(1, 8), id=rid)
+        r.priority = draw(0, 2)
+        if draw(0, 3) == 0:
+            r.deadline_s = draw(1, 6) / 10.0
+        orders[rid] = router.submit(r, arrival_s=now[0])
+
+    def do_step():
+        router.step()
+
+    def do_tick():
+        now[0] += draw(0, 4) / 10.0
+
+    def do_cancel():
+        if next_rid[0]:
+            router.cancel(draw(0, next_rid[0] - 1))
+
+    def do_kill():
+        live = [r for r in reps if r.state != DOWN]
+        if live and draw(0, 2) == 0:
+            live[draw(0, len(live) - 1)].force_crash()
+
+    actions = (do_submit, do_submit, do_step, do_step, do_tick,
+               do_cancel, do_kill)
+    for _ in range(n_events):
+        actions[draw(0, len(actions) - 1)]()
+    while next_rid[0] < n_requests:
+        do_submit()
+    guard = 0
+    while any(router.result(o) is None for o in orders.values()):
+        guard += 1
+        assert guard < 5000, "fleet machine did not converge"
+        now[0] += 0.05                     # backoff + hedge timers advance
+        router.step()
+
+    results = {rid: router.result(o) for rid, o in orders.items()}
+    assert all(res is not None for res in results.values())  # zero lost
+    assert all(res["status"] in TERMINAL_STATUSES
+               for res in results.values())
+    counts = router.terminal_counts()
+    assert sum(counts.values()) == n_requests, counts
+    for status in counts:                   # counters == settled statuses:
+        assert counts[status] == sum(       # nothing settled twice
+            1 for res in results.values() if res["status"] == status), \
+            (status, counts, results)
+    assert router.idle and not router._leg_index
+    for res in results.values():            # stream integrity across
+        toks = res["tokens"]                # migration/hedging/cancel
+        assert toks == [100 + i for i in range(len(toks))], res
+
+
+def test_fleet_machine_random():
+    """Deterministic randomized sweep (runs with or without hypothesis)."""
+    rng = np.random.RandomState(11)
+    for _ in range(40):
+        _fleet_machine(
+            lambda lo, hi: int(rng.randint(lo, hi + 1)),
+            n_replicas=int(rng.randint(1, 4)),
+            n_requests=int(rng.randint(1, 10)),
+            n_events=int(rng.randint(1, 60)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_fleet_machine_hypothesis(data):
+        _fleet_machine(
+            lambda lo, hi: data.draw(st.integers(lo, hi)),
+            n_replicas=data.draw(st.integers(1, 3)),
+            n_requests=data.draw(st.integers(1, 8)),
+            n_events=data.draw(st.integers(1, 40)))
