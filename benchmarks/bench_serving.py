@@ -187,29 +187,73 @@ def bench_obs_overhead(cfg, params, reqs, *, engine_kw, iters) -> dict:
     traces/histograms/scale reads are skipped).  Records the tokens/s
     fraction the full telemetry path costs; the budget is <1%.
 
+    The enabled arm now carries the FULL numerics health plane
+    (obs/health.py): device-side capture rides ``obs.enabled``, so the
+    prefill/decode programs return their stats side-outputs and the
+    engine folds them host-side.  A third arm (enabled obs,
+    ``capture=False``) isolates the health plane's INCREMENTAL price
+    from the pre-existing telemetry stack: ``health_capture_frac`` is
+    enabled/no-capture, ``overhead_frac`` stays the headline
+    enabled/disabled number the gate tracks (info-classed — the smoke
+    model is so small that fixed host work reads as several percent of
+    a drain; the committed full-size number is the budget reference).
+
     The budget is smaller than this host's run-to-run noise (min-of-N
     drain times swing several percent), so the estimator is PAIRED: each
-    round times both engines back-to-back (same noise window) and the
+    round times all arms back-to-back (same noise window) and each
     overhead is the median of the per-round time ratios — slow drift
-    cancels instead of landing on whichever mode ran during it."""
-    engines = {mode: ContinuousEngine(
-        cfg, params, obs=Obs(enabled=(mode == "enabled")), **engine_kw)
-        for mode in ("enabled", "disabled")}
+    cancels instead of landing on whichever mode ran during it.  The
+    arm ORDER rotates per round (a fixed order showed a systematic
+    position bias bigger than the effect under measurement), and the
+    smoke drains are milliseconds, so the round floor is high.  A
+    blowout backstop asserts the health plane's incremental median
+    stays under 10% — calibrated to the smoke config, where the
+    capture's fixed cost (~30 extra cheap ops in a ~1 ms prefill
+    program plus one stats transfer per dispatch) reads as several
+    percent of a ~30 ms drain; it sits at ~1% on the full-size bench
+    model.  The backstop exists to catch regressions like a sort-based
+    reduction landing in the decode loop (+36% when ``lax.top_k``
+    briefly did)."""
+    engines = {
+        "enabled": ContinuousEngine(cfg, params, obs=Obs(), **engine_kw),
+        "no_capture": ContinuousEngine(cfg, params, obs=Obs(),
+                                       capture=False, **engine_kw),
+        "disabled": ContinuousEngine(cfg, params, obs=Obs(enabled=False),
+                                     **engine_kw),
+    }
+    assert engines["enabled"]._health is not None, (
+        "enabled arm lost the health plane: obs_overhead no longer "
+        "prices device-side capture")
+    assert engines["no_capture"]._health is None, (
+        "capture=False arm grew a health plane: the middle arm no "
+        "longer isolates the capture's incremental price")
+    assert engines["disabled"]._health is None, (
+        "disabled arm grew a health plane: the baseline is no longer "
+        "the capture-free program")
     for eng in engines.values():
         eng.generate(reqs)                              # compile + warm
-    best, tokens, ratios = {}, {}, []
-    for _ in range(max(iters, 8)):
+    best, tokens, ratios, hratios = {}, {}, [], []
+    order = list(engines)
+    for r in range(max(iters, 24)):
         dt = {}
-        for mode, eng in engines.items():
+        for mode in order[r % 3:] + order[:r % 3]:      # rotate position
+            eng = engines[mode]
             t0 = time.perf_counter()
             res = eng.generate(reqs)
             dt[mode] = time.perf_counter() - t0
-            tokens[mode] = sum(r["decode_len"] for r in res)
+            tokens[mode] = sum(r2["decode_len"] for r2 in res)
             best[mode] = min(best.get(mode, dt[mode]), dt[mode])
         ratios.append(dt["enabled"] / dt["disabled"])
+        hratios.append(dt["enabled"] / dt["no_capture"])
     out = {mode: _metrics(None, tokens[mode], best[mode])
            for mode in engines}
     out["overhead_frac"] = Histogram.of(ratios).percentile(50) - 1.0
+    out["health_capture_frac"] = Histogram.of(hratios).percentile(50) - 1.0
+    out["health_capture"] = True
+    assert out["health_capture_frac"] < 0.10, (
+        f"health-plane blowout: {out['health_capture_frac']:+.2%} median "
+        f"over the capture-free telemetry arm (backstop 10%) — the "
+        f"device-side capture or host folds regressed the hot path")
     return out
 
 
@@ -369,6 +413,7 @@ def main(argv=None):
         "kv_slots_ratio_int8_vs_bf16": (kvm["int8"]["slots"]
                                         / kvm["bf16"]["slots"]),
         "obs_overhead_frac": rows["obs_overhead"]["overhead_frac"],
+        "health_capture_frac": rows["obs_overhead"]["health_capture_frac"],
         "overload_goodput_tokens_per_s": {
             f: rows["overload_goodput"][f]["goodput_tokens_per_s"]
             for f in rows["overload_goodput"]},
@@ -392,7 +437,8 @@ def main(argv=None):
           f"({slot_counts})")
     print(f"[bench_serving] obs overhead: "
           f"{result['obs_overhead_frac'] * 100:+.2f}% tokens/s "
-          f"(enabled vs disabled telemetry)")
+          f"(enabled vs disabled telemetry; health capture alone "
+          f"{result['health_capture_frac'] * 100:+.2f}%)")
     og = rows["overload_goodput"]
     curve = ", ".join(
         f"{f}: {og[f]['goodput_tokens_per_s']:.1f} tok/s "

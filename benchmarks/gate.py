@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Tuple
 DEFAULT_RULES: Tuple[Tuple[str, str, float], ...] = (
     # timing-noisy or derived-ratio sections: visible, never gated
     ("*overhead_frac", "info", 0.0),
+    ("*health_capture_frac", "info", 0.0),
     ("*overload*", "info", 0.0),
     ("*statuses*", "info", 0.0),
     ("*p99_ratio*", "info", 0.0),
@@ -65,6 +66,19 @@ DEFAULT_RULES: Tuple[Tuple[str, str, float], ...] = (
     ("fleet_crash*deadline_s", "info", 0.0),
     ("fleet_crash*makespan_s", "info", 0.0),
     ("fleet_crash*oversubscription", "info", 0.0),
+    # numerics & quality health plane (obs/health.py): online shadow-
+    # oracle greedy agreement is a deterministic function of (arch, seed,
+    # workload, quant policy) — teacher-forced greedy replay — so it
+    # gates EXACTLY; drift magnitudes, clip/saturation rates, and
+    # requant accounting are hardware/noise-tinged and stay visible-only
+    ("*greedy_agreement", "exact", 0.0),
+    ("*logit_drift*", "info", 0.0),
+    ("*clip_rate*", "info", 0.0),
+    ("*clip.*", "info", 0.0),
+    ("*requant*", "info", 0.0),
+    ("*nonfinite*", "info", 0.0),
+    ("*shadow*", "info", 0.0),
+    ("*act_absmax*", "info", 0.0),
     # throughput: may not drop
     ("*tokens_per_s", "higher", 0.10),
     ("speedup*", "higher", 0.10),

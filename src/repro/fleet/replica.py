@@ -16,9 +16,12 @@ Health state machine::
 
 Signals: dispatch heartbeats (wall time of each ``step`` call — a hang
 fault or a wedged device program shows up as a step timeout),
-``engine.anomalies`` (NaN/Inf-guard trips), and a consecutive-timeout
-counter.  DOWN is terminal: the replica refuses further work and the
-router calls ``salvage()`` exactly once to recover its in-flight state.
+``engine.anomalies`` (NaN/Inf-guard trips), SLO watchdog alerts (the
+``slo.alerts`` counter an ``obs.slo.SloWatchdog`` bound to this
+replica's registry bumps — sustained quality burn degrades the replica
+the same way an anomaly does), and a consecutive-timeout counter.  DOWN
+is terminal: the replica refuses further work and the router calls
+``salvage()`` exactly once to recover its in-flight state.
 
 ``salvage`` reads the engine's host-side scheduler state (queue entries,
 running slots' generated tokens, unconsumed terminal results).  In this
@@ -107,6 +110,12 @@ class EngineReplica:
         self._g_health.set(_HEALTH_LEVEL[HEALTHY])
         self._c_timeouts = reg.counter("replica.step_timeouts")
         self._c_crashes = reg.counter("replica.crashes")
+        # SLO consumption: any watchdog bound to this registry bumps
+        # labelled slo.alerts counters; the replica folds their SUM so a
+        # sustained quality burn (drift, agreement, clip rate) degrades it
+        # exactly like a NaN-guard anomaly would
+        self._reg = reg
+        self._last_slo_alerts = self._slo_alerts()
 
     # -- properties the router keys on ------------------------------------
     @property
@@ -166,6 +175,9 @@ class EngineReplica:
         anomalies = self.engine.anomalies
         anomaly_delta = anomalies - self._last_anomalies
         self._last_anomalies = anomalies
+        slo_alerts = self._slo_alerts()
+        slo_delta = slo_alerts - self._last_slo_alerts
+        self._last_slo_alerts = slo_alerts
         timed_out = (t1 - t0) > self.step_timeout_s
         if timed_out:
             self._c_timeouts.inc()
@@ -176,7 +188,7 @@ class EngineReplica:
                                 f"(> {self.step_timeout_s}s)")
                 return progress
             self._degrade()
-        elif anomaly_delta > 0:
+        elif anomaly_delta > 0 or slo_delta > 0:
             self.consecutive_timeouts = 0
             self._degrade()
         else:
@@ -187,6 +199,15 @@ class EngineReplica:
                     self.state = HEALTHY
                     self._g_health.set(_HEALTH_LEVEL[HEALTHY])
         return progress
+
+    def _slo_alerts(self) -> float:
+        """Sum of every ``slo.alerts*`` counter in the replica registry
+        (the watchdog labels per rule/severity; health folds the total)."""
+        total = 0.0
+        for fname, m in self._reg.items():
+            if fname.startswith("slo.alerts"):
+                total += m.value
+        return total
 
     def cancel(self, request_id) -> bool:
         if not self.live:
@@ -277,6 +298,7 @@ class EngineReplica:
             "consecutive_timeouts": self.consecutive_timeouts,
             "step_timeouts": int(self._c_timeouts.value),
             "crashes": int(self._c_crashes.value),
+            "slo_alerts": int(self._slo_alerts()),
             "last_heartbeat_s": self.last_heartbeat_s,
         }
         st["engine"] = self.engine.stats()

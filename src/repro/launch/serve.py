@@ -92,6 +92,21 @@ def main(argv=None):
     ap.add_argument("--no-obs", action="store_true",
                     help="disable traces/histograms (counters stay live; "
                          "the zero-overhead telemetry path)")
+    ap.add_argument("--shadow-sample", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="continuous: replay this fraction of FINISHED "
+                         "requests through the f32 dense-cache oracle "
+                         "between dispatches, publishing online "
+                         "health.greedy_agreement / health.logit_drift "
+                         "(obs/health.py)")
+    ap.add_argument("--slo", action="store_true",
+                    help="run the stock SLO watchdog (obs/slo.py) over "
+                         "every emitted snapshot; fired alerts are "
+                         "appended to --metrics-out as alert records and "
+                         "summarized on exit")
+    ap.add_argument("--slo-rules", default=None, metavar="RULES.json",
+                    help="with --slo: JSON list of Rule dicts instead of "
+                         "the stock ruleset")
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="write a Perfetto-loadable Chrome trace of the "
                          "serve (engine dispatch lanes, one lane per "
@@ -125,9 +140,14 @@ def main(argv=None):
     quant = QuantPolicy(kv_dtype=args.kv_dtype,
                         quant_weights=args.quant_weights,
                         weight_bits=args.weight_bits)
+    watchdog = None
+    if args.slo:
+        from ..obs.slo import SloWatchdog, rules_from_json
+        watchdog = SloWatchdog(rules_from_json(args.slo_rules)
+                               if args.slo_rules else None)
     obs = Obs(enabled=not args.no_obs, emit_path=args.metrics_out,
               emit_every=args.metrics_every,
-              hardware=resolve_hardware(args.hardware))
+              hardware=resolve_hardware(args.hardware), slo=watchdog)
     router = None
     if args.replicas > 1 and args.engine != "continuous":
         raise SystemExit("[launch.serve] --replicas > 1 requires "
@@ -150,7 +170,8 @@ def main(argv=None):
                 paged_attn=args.paged_attn,
                 quant=quant, obs=eng_obs, admission=args.admission,
                 max_queue=args.max_queue,
-                max_preemptions=args.max_preemptions)
+                max_preemptions=args.max_preemptions,
+                shadow_sample=args.shadow_sample)
 
         if args.replicas > 1:
             from ..fleet import EngineReplica, Router
@@ -167,6 +188,9 @@ def main(argv=None):
             print(f"[launch.serve] note: --kv-dtype {args.kv_dtype} applies "
                   f"to the continuous engine's paged pool; the batch "
                   f"engine's dense cache stays f32 (parity oracle)")
+        if args.shadow_sample > 0.0:
+            print("[launch.serve] note: --shadow-sample applies to the "
+                  "continuous engine (the batch engine IS the f32 oracle)")
         engine = Engine(cfg, params, max_batch=args.max_batch,
                         max_seq=max_seq, sample=args.sample,
                         precompute=not args.no_precompute,
@@ -236,6 +260,22 @@ def main(argv=None):
         print(f"[launch.serve] pool pressure: free_pages={st['free_pages']} "
               f"min_free_pages={st['min_free_pages']} (low-water headroom "
               f"of {engine.num_pages - 1} usable)")
+        if st.get("health") is not None:
+            h = st["health"]
+            print(f"[launch.serve] health: nonfinite_dispatches="
+                  f"{h['nonfinite_dispatches']} "
+                  f"act_absmax_peak={h['act_absmax_peak']} "
+                  f"kv_clip_rate={st['kv_clip_rate']}")
+        if st.get("shadow_oracle") is not None:
+            sh = st["shadow_oracle"]
+            agree = sh["greedy_agreement"]
+            drift = sh["logit_drift"]
+            print(f"[launch.serve] shadow oracle: sampled={sh['sampled']} "
+                  f"replays={sh['replays']} dropped={sh['dropped']} "
+                  f"greedy_agreement="
+                  f"{'n/a' if agree is None else f'{agree:.4f}'} "
+                  f"logit_drift="
+                  f"{'n/a' if drift is None else f'{drift:.4g}'}")
     elif st is not None:
         print(f"[launch.serve] telemetry: batches={st['batches']} "
               f"prompt_pad_waste={st['prompt_pad_waste']} tokens "
@@ -254,6 +294,14 @@ def main(argv=None):
         obs.close()                        # final snapshot + trailing traces
         print(f"[launch.serve] metrics: {obs.emitter.lines_written} "
               f"lines -> {args.metrics_out}")
+    if watchdog is not None:
+        ws = watchdog.stats()
+        print(f"[launch.serve] slo: {ws['alerts']} alerts "
+              f"({ws['page_alerts']} page) by_rule={ws['by_rule']}")
+        for a in watchdog.alerts:
+            print(f"[launch.serve]   {a['severity'].upper()} {a['rule']} "
+                  f"{a['series']}: {a['value']:.6g} {a['op']} "
+                  f"{a['threshold']:.6g}")
     if args.trace_out is not None:
         trace = write_trace(obs, args.trace_out,
                             extra_meta={"arch": args.arch,

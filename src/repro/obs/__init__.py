@@ -20,11 +20,13 @@ import time
 from typing import Callable, Dict, Optional
 
 from .emit import Emitter, validate_jsonl, validate_line
+from .health import HealthPlane, ShadowOracle
 from .metrics import (BYTES_BUCKETS, RATIO_BUCKETS, SECONDS_BUCKETS,
                       Counter, Gauge, Histogram, Registry, ScopedRegistry,
                       prometheus_text)
 from .prof import (DispatchCost, Profiler, ScopedProfiler, aot_compile,
                    resolve_hardware)
+from .slo import Rule, SloWatchdog, default_rules
 from .trace import RequestTrace, TraceStore
 
 __all__ = ["Obs", "Registry", "ScopedRegistry", "Counter", "Gauge",
@@ -32,7 +34,8 @@ __all__ = ["Obs", "Registry", "ScopedRegistry", "Counter", "Gauge",
            "validate_line", "validate_jsonl", "SECONDS_BUCKETS",
            "BYTES_BUCKETS", "RATIO_BUCKETS", "Profiler", "ScopedProfiler",
            "DispatchCost", "aot_compile", "resolve_hardware",
-           "prometheus_text"]
+           "prometheus_text", "HealthPlane", "ShadowOracle", "Rule",
+           "SloWatchdog", "default_rules"]
 
 
 class Obs:
@@ -42,7 +45,7 @@ class Obs:
                  emit_path: Optional[str] = None,
                  emit_callback: Optional[Callable[[Dict], None]] = None,
                  emit_every: int = 10,
-                 hardware=None):
+                 hardware=None, slo: Optional[SloWatchdog] = None):
         self.enabled = bool(enabled)
         self.registry = Registry()
         self.traces = TraceStore()
@@ -56,11 +59,21 @@ class Obs:
         self._t0 = time.perf_counter()
         self._labels: Dict[str, str] = {}
         self._owns_emitter = True
+        # SLO watchdog (obs/slo.py): bound to the registry so fired
+        # alerts bump labelled slo.alerts counters; with an emitter it
+        # evaluates on every snapshot flush (alerts become JSONL lines),
+        # without one it runs on the same emit_every tick cadence.
+        self.slo = slo
+        self._slo_ticks = 0
+        self._slo_every = max(1, int(emit_every))
+        if slo is not None:
+            slo.bind(self.registry)
         self.emitter: Optional[Emitter] = None
         if emit_path is not None or emit_callback is not None:
             self.emitter = Emitter(self.registry, self.traces,
                                    path=emit_path, callback=emit_callback,
-                                   every=emit_every, clock=self.now)
+                                   every=emit_every, clock=self.now,
+                                   watchdog=slo)
 
     def scoped(self, **labels) -> "Obs":
         """A labelled view sharing this Obs's clock, trace store, emitter,
@@ -81,6 +94,9 @@ class Obs:
         view._labels = merged
         view._owns_emitter = False
         view.emitter = self.emitter
+        view.slo = self.slo
+        view._slo_ticks = 0
+        view._slo_every = self._slo_every
         return view
 
     def now(self) -> float:
@@ -119,14 +135,46 @@ class Obs:
 
     # -- emitter cadence --------------------------------------------------
     def tick(self) -> None:
-        if self.enabled and self.emitter is not None:
+        if not self.enabled:
+            return
+        if self.emitter is not None:
             self.emitter.tick()
+            return
+        # no emitter: the owning Obs still drives the SLO watchdog on the
+        # same cadence (scoped views defer to their owner's ticks)
+        if self.slo is not None and self._owns_emitter:
+            self._slo_ticks += 1
+            if self._slo_ticks % self._slo_every == 0:
+                self._slo_observe()
+
+    def baseline(self) -> None:
+        """Emit/observe one snapshot NOW — an engine calls this after
+        registering its counters so rate/ratio SLO rules measure their
+        first window from a true zero baseline.  Without it, any counter
+        activity before the first ``emit_every`` tick (e.g. a NaN-guard
+        trip in the opening dispatches) lands inside the skipped first
+        snapshot and can never fire the anomaly-burst rule."""
+        if not self.enabled:
+            return
+        if self.emitter is not None:
+            self.emitter.flush()
+        elif self.slo is not None and self._owns_emitter:
+            self._slo_observe()
+
+    def _slo_observe(self) -> None:
+        snap = {"type": "snapshot", "seq": None, "t_s": self.now()}
+        snap.update(self.registry.snapshot())
+        self.slo.observe(snap)
 
     def close(self) -> None:
         """Flush + close the emitter.  A scoped view only flushes — the
         shared emitter belongs to the base Obs, and a replica draining must
         not cut off its fleet-mates' telemetry."""
         if self.emitter is None:
+            # emitterless SLO runs still get a final evaluation so the
+            # last inter-snapshot window is not silently dropped
+            if self.slo is not None and self._owns_emitter:
+                self._slo_observe()
             return
         if self._owns_emitter:
             self.emitter.close()

@@ -16,6 +16,13 @@ Line schema (every line is one JSON object; docs/observability.md):
 
   {"type": "trace", "t_s": ..., **RequestTrace.to_dict()}
 
+  {"type": "alert", "t_s": ..., "rule": ..., "severity": "warn"|"page",
+   "series": ..., "value": ..., "threshold": ..., "op": ...}
+
+Snapshots additionally carry an optional ``gauge_marks`` section
+(high/low-water marks per gauge); alert lines come from the SLO
+watchdog (``obs/slo.py``) when one is attached.
+
 ``validate_line`` / ``validate_jsonl`` check the schema (required keys,
 numeric types, histogram bucket conservation, trace span ordering) — the
 CI emitter smoke runs ``python -m repro.obs.emit --validate metrics.jsonl``
@@ -35,6 +42,11 @@ from .metrics import Registry
 from .trace import TraceStore
 
 SNAPSHOT_KEYS = ("type", "seq", "t_s", "counters", "gauges", "histograms")
+# SLO watchdog alert lines (obs/slo.py): one record per rule excursion
+ALERT_KEYS = ("type", "t_s", "rule", "severity", "series", "value",
+              "threshold", "op")
+ALERT_SEVERITIES = ("warn", "page")
+ALERT_OPS = (">", ">=", "<", "<=")
 TRACE_KEYS = ("type", "t_s", "id", "order", "prompt_len", "decode_len",
               "status", "enqueue_s", "admit_s", "first_token_s", "retire_s",
               "queue_s", "ttft_s", "prefill_s", "decode_s", "tpot_s",
@@ -54,13 +66,17 @@ class Emitter:
     def __init__(self, registry: Registry, traces: TraceStore, *,
                  path: Optional[str] = None,
                  callback: Optional[Callable[[Dict], None]] = None,
-                 every: int = 1, clock: Callable[[], float] = None):
+                 every: int = 1, clock: Callable[[], float] = None,
+                 watchdog=None):
         if path is None and callback is None:
             raise ValueError("Emitter needs a path or a callback sink")
         self.registry = registry
         self.traces = traces
         self.path = path
         self.callback = callback
+        # optional obs.slo.SloWatchdog: evaluated on every snapshot this
+        # emitter writes; fired alerts become JSONL lines right behind it
+        self.watchdog = watchdog
         self.every = max(1, int(every))
         self.clock = clock or (lambda: 0.0)
         self.ticks = 0
@@ -97,6 +113,9 @@ class Emitter:
         snap.update(self.registry.snapshot())
         self._write(snap)
         self.seq += 1
+        if self.watchdog is not None:
+            for alert in self.watchdog.observe(snap):
+                self._write(alert)
         for tr in self.traces.drain_pending():
             self._write({"type": "trace", "t_s": t, **tr.to_dict()})
         if self._file is not None:
@@ -142,6 +161,31 @@ def validate_line(obj: Dict) -> None:
             if sum(h["counts"]) != h["count"]:
                 raise ValueError(f"histogram {name}: bucket counts "
                                  f"{sum(h['counts'])} != count {h['count']}")
+        # optional section (newer emitters): gauge high/low-water marks
+        for name, marks in obj.get("gauge_marks", {}).items():
+            if not _num(marks.get("max")):
+                raise ValueError(f"gauge_marks[{name}]: non-numeric max "
+                                 f"{marks!r}")
+            mn = marks.get("min")
+            if mn is not None and (not _num(mn) or mn > marks["max"]):
+                raise ValueError(f"gauge_marks[{name}]: bad min {marks!r}")
+    elif kind == "alert":
+        missing = [k for k in ALERT_KEYS if k not in obj]
+        if missing:
+            raise ValueError(f"alert missing keys {missing}")
+        if obj["severity"] not in ALERT_SEVERITIES:
+            raise ValueError(f"alert {obj['rule']!r}: unknown severity "
+                             f"{obj['severity']!r}")
+        if obj["op"] not in ALERT_OPS:
+            raise ValueError(f"alert {obj['rule']!r}: unknown op "
+                             f"{obj['op']!r}")
+        for k in ("t_s", "value", "threshold"):
+            if not _num(obj[k]):
+                raise ValueError(f"alert {obj['rule']!r}: non-numeric "
+                                 f"{k} {obj[k]!r}")
+        for k in ("rule", "series"):
+            if not isinstance(obj[k], str) or not obj[k]:
+                raise ValueError(f"alert: bad {k} {obj.get(k)!r}")
     elif kind == "trace":
         missing = [k for k in TRACE_KEYS if k not in obj]
         if missing:
@@ -173,7 +217,7 @@ def validate_line(obj: Dict) -> None:
 
 def validate_jsonl(path: str) -> Dict[str, int]:
     """Validate every line of an emitter file; returns line-type counts."""
-    counts = {"snapshot": 0, "trace": 0}
+    counts = {"snapshot": 0, "trace": 0, "alert": 0}
     with open(path) as f:
         for i, line in enumerate(f):
             if not line.strip():
@@ -230,7 +274,8 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"< required {args.min_traces}", file=sys.stderr)
         return 1
     print(f"[obs.emit] {args.validate}: OK "
-          f"({counts['snapshot']} snapshots, {counts['trace']} traces)")
+          f"({counts['snapshot']} snapshots, {counts['trace']} traces, "
+          f"{counts['alert']} alerts)")
     return 0
 
 

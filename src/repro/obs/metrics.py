@@ -122,6 +122,30 @@ class Histogram:
         if len(self._values) < self._keep:
             self._values.append(v)
 
+    def observe_many(self, vs) -> None:
+        """Bulk ``observe`` over a vector (numpy array OK) — state
+        identical to looping ``observe``, but the bucketing is one
+        ``searchsorted`` instead of a Python bisect-append per element.
+        The numerics health plane folds small per-dispatch vectors on
+        the serving hot path, where per-element observe() showed up in
+        the ``obs_overhead`` bench."""
+        import numpy as np
+        vs = np.asarray(vs, dtype=np.float64)
+        if vs.size == 0:
+            return
+        for i in np.searchsorted(self.bounds, vs, side="right"):
+            self.counts[i] += 1
+        self.count += int(vs.size)
+        self.sum += float(vs.sum())
+        mn, mx = float(vs.min()), float(vs.max())
+        if self.min is None or mn < self.min:
+            self.min = mn
+        if self.max is None or mx > self.max:
+            self.max = mx
+        room = self._keep - len(self._values)
+        if room > 0:
+            self._values.extend(float(v) for v in vs[:room])
+
     def percentile(self, q: float) -> Optional[float]:
         """q-th percentile (0..100), ``numpy.percentile`` linear-interp
         semantics over the retained values; None when empty.  Falls back
@@ -213,13 +237,20 @@ class Registry:
 
     def snapshot(self) -> Dict:
         """JSON-able view: {"counters": {...}, "gauges": {...},
-        "histograms": {name: Histogram.to_dict()}}."""
-        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        "histograms": {name: Histogram.to_dict()},
+        "gauge_marks": {name: {"max": ..., "min": ...}}} — the
+        high/low-water marks ride along so peak/headroom telemetry
+        (``pool.free_pages`` low-water) survives snapshot consumers like
+        the Prometheus renderer."""
+        out = {"counters": {}, "gauges": {}, "histograms": {},
+               "gauge_marks": {}}
         for fname, m in self.items():
             if isinstance(m, Counter):
                 out["counters"][fname] = m.value
             elif isinstance(m, Gauge):
                 out["gauges"][fname] = m.value
+                out["gauge_marks"][fname] = {"max": m.max_seen,
+                                             "min": m.min_seen}
             else:
                 out["histograms"][fname] = m.to_dict()
         return out
@@ -351,6 +382,17 @@ def prometheus_text(snapshot: Dict) -> str:
     for fname, v in snapshot.get("gauges", {}).items():
         pname, labels = _prom_split(fname)
         fam(pname, "gauge").append(f"{pname}{_prom_labels(labels)} {v!r}")
+    # gauge high/low-water marks as companion series: max_seen/min_seen
+    # would otherwise be dropped on the Prometheus path (a scrape only
+    # sees point-in-time values — pool.free_pages low-water matters)
+    for fname, marks in snapshot.get("gauge_marks", {}).items():
+        pname, labels = _prom_split(fname)
+        ls = _prom_labels(labels)
+        fam(pname + "_max", "gauge").append(
+            f"{pname}_max{ls} {float(marks['max'])!r}")
+        if marks.get("min") is not None:
+            fam(pname + "_min", "gauge").append(
+                f"{pname}_min{ls} {float(marks['min'])!r}")
     for fname, h in snapshot.get("histograms", {}).items():
         pname, labels = _prom_split(fname)
         lines = fam(pname, "histogram")

@@ -10,14 +10,14 @@ thread through `serve/kvcache.build_pool`, `serve/params`, and the
 attention kernels.
 """
 from .codec import (QuantPolicy, absmax_scale, dequantize, pack_int4,
-                    page_scatter, plane_from_cache, quantize,
-                    quantize_page_block, quantize_plane,
+                    page_scatter, plane_clip_report, plane_from_cache,
+                    quantize, quantize_page_block, quantize_plane,
                     quantize_plane_cache, quantize_serving_params,
-                    unpack_int4)
+                    saturation_counts, unpack_int4)
 
 __all__ = [
     "QuantPolicy", "absmax_scale", "dequantize", "pack_int4",
-    "page_scatter", "plane_from_cache", "quantize", "quantize_page_block",
-    "quantize_plane", "quantize_plane_cache", "quantize_serving_params",
-    "unpack_int4",
+    "page_scatter", "plane_clip_report", "plane_from_cache", "quantize",
+    "quantize_page_block", "quantize_plane", "quantize_plane_cache",
+    "quantize_serving_params", "saturation_counts", "unpack_int4",
 ]

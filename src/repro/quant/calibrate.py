@@ -98,6 +98,87 @@ def _prompt_batch(cfg: ArchConfig, toks: np.ndarray) -> Dict:
     return batch
 
 
+class ParityRunner:
+    """Reusable teacher-forced parity harness over PRECOMPUTED params.
+
+    Holds the model and jitted oracle/quantized step functions so jit
+    caches survive across prompts — the online shadow-oracle sampler
+    (``obs/health.ShadowOracle``) replays many finished requests through
+    one runner; ``parity_report`` wraps a single-shot run.  Distinct
+    prompt/budget sizes recompile per page-count bucket, same as the
+    serving stack.
+    """
+
+    def __init__(self, cfg: ArchConfig, params_o, params_q, *,
+                 policy: QuantPolicy, page_size: int = 4):
+        self.cfg = cfg
+        self.policy = policy
+        self.page_size = int(page_size)
+        self.params_o = params_o
+        self.params_q = params_q
+        self.model = build_model(cfg)
+        self._step_o = jax.jit(
+            lambda p, t, c, pos: self.model.decode_step(p, t, c, pos))
+        self._step_q = jax.jit(
+            lambda p, t, c, pos, tab: self.model.decode_step(
+                p, t, c, pos, block_table=tab))
+        self._prefills: Dict[int, object] = {}
+
+    def _prefill(self, n_pages: int):
+        fn = self._prefills.get(n_pages)
+        if fn is None:
+            fn = dec.make_prefill_pack_step(self.cfg, n_pages,
+                                            self.page_size)
+            self._prefills[n_pages] = fn
+        return fn
+
+    def run(self, prompt, new_tokens: int) -> Dict:
+        """Teacher-forced decode of ``new_tokens`` steps on one prompt;
+        both paths consume the ORACLE's greedy token each step.  Returns
+        ``steps`` / ``greedy_agreement`` / ``max_logit_drift``."""
+        prompt = np.asarray(prompt, np.int32)
+        S = len(prompt)
+        new_tokens = max(int(new_tokens), 1)
+        model, cfg, page_size = self.model, self.cfg, self.page_size
+
+        # oracle: dense f32 cache
+        cache = model.init_cache(1, S + new_tokens, dtype=jnp.float32)
+        logits, cache = model.prefill(self.params_o,
+                                      _prompt_batch(cfg, prompt), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+
+        # quantized: paged pool, pages 1..maxp of a minimal pool
+        maxp = kvc.pages_for(S + new_tokens, page_size)
+        pool = kvc.build_pool(cfg, maxp + 1, page_size, self.policy)
+        table = jnp.arange(1, maxp + 1, dtype=jnp.int32)[None]
+        n_pages = kvc.pages_for(S, page_size)
+        spad = n_pages * page_size
+        padded = np.zeros(spad, np.int32)
+        padded[:S] = prompt
+        first_q, _ok, pool, _stats = self._prefill(n_pages)(
+            self.params_q, _prompt_batch(cfg, padded), pool,
+            table[0, :n_pages], jnp.int32(S))
+
+        agree = [int(first_q) == tok]
+        drift = 0.0
+        for j in range(new_tokens - 1):
+            pos = S + j
+            lo, cache = self._step_o(self.params_o,
+                                     jnp.asarray([[tok]], jnp.int32),
+                                     cache, jnp.int32(pos))
+            lq, pool = self._step_q(self.params_q,
+                                    jnp.asarray([[tok]], jnp.int32), pool,
+                                    jnp.asarray([pos], jnp.int32), table)
+            lo32 = np.asarray(lo[0, -1], np.float32)
+            lq32 = np.asarray(lq[0, -1], np.float32)
+            drift = max(drift, float(np.abs(lq32 - lo32).max()))
+            agree.append(int(lq32.argmax()) == int(lo32.argmax()))
+            tok = int(lo32.argmax())           # teacher forcing: oracle token
+        return {"steps": len(agree),
+                "greedy_agreement": float(np.mean(agree)),
+                "max_logit_drift": drift}
+
+
 def parity_report(cfg: ArchConfig, params, *, policy: QuantPolicy,
                   prompt_len: int = 20, new_tokens: int = 16,
                   page_size: int = 4, seed: int = 0) -> Dict:
@@ -109,54 +190,19 @@ def parity_report(cfg: ArchConfig, params, *, policy: QuantPolicy,
     SAME tokens at the same positions through the real paged machinery
     (prefill-pack + block-table decode steps).  Returns ``max_logit_drift``
     (max |logits_q - logits_f32| over every compared step),
-    ``greedy_agreement`` in [0, 1], and ``steps``.
+    ``greedy_agreement`` in [0, 1], and ``steps``.  The same harness
+    (``ParityRunner``) backs the ONLINE shadow-oracle sampling in
+    ``obs/health.py`` — one definition of agreement/drift offline and on.
     """
-    model = build_model(cfg)
     rng = np.random.RandomState(seed)
     prompt = rng.randint(1, cfg.vocab_size, size=prompt_len).astype(np.int32)
-    S = len(prompt)
-
     params_o = precompute_serving_params(params, cfg)
     params_q = precompute_serving_params(params, cfg, policy)
-
-    # oracle: dense f32 cache
-    cache = model.init_cache(1, S + new_tokens, dtype=jnp.float32)
-    logits, cache = model.prefill(params_o, _prompt_batch(cfg, prompt), cache)
-    tok = int(jnp.argmax(logits[0, -1]))
-
-    # quantized: paged pool, pages 1..maxp of a minimal pool
-    maxp = kvc.pages_for(S + new_tokens, page_size)
-    pool = kvc.build_pool(cfg, maxp + 1, page_size, policy)
-    table = jnp.arange(1, maxp + 1, dtype=jnp.int32)[None]
-    n_pages = kvc.pages_for(S, page_size)
-    spad = n_pages * page_size
-    padded = np.zeros(spad, np.int32)
-    padded[:S] = prompt
-    first_q, _ok, pool = dec.make_prefill_pack_step(cfg, n_pages, page_size)(
-        params_q, _prompt_batch(cfg, padded), pool, table[0, :n_pages],
-        jnp.int32(S))
-
-    agree = [int(first_q) == tok]
-    drift = 0.0
-    step_o = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos))
-    step_q = jax.jit(lambda p, t, c, pos, tab: model.decode_step(
-        p, t, c, pos, block_table=tab))
-    for j in range(new_tokens - 1):
-        pos = S + j
-        lo, cache = step_o(params_o, jnp.asarray([[tok]], jnp.int32), cache,
-                           jnp.int32(pos))
-        lq, pool = step_q(params_q, jnp.asarray([[tok]], jnp.int32), pool,
-                          jnp.asarray([pos], jnp.int32), table)
-        lo32 = np.asarray(lo[0, -1], np.float32)
-        lq32 = np.asarray(lq[0, -1], np.float32)
-        drift = max(drift, float(np.abs(lq32 - lo32).max()))
-        agree.append(int(lq32.argmax()) == int(lo32.argmax()))
-        tok = int(lo32.argmax())               # teacher forcing: oracle token
-    return {"arch": cfg.name,
-            "policy": policy.describe(),
-            "steps": len(agree),
-            "greedy_agreement": float(np.mean(agree)),
-            "max_logit_drift": drift}
+    runner = ParityRunner(cfg, params_o, params_q, policy=policy,
+                          page_size=page_size)
+    out = {"arch": cfg.name, "policy": policy.describe()}
+    out.update(runner.run(prompt, new_tokens))
+    return out
 
 
 def servable_parity_sweep(policy: QuantPolicy, *,

@@ -115,6 +115,22 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def saturation_counts(q: jax.Array,
+                      qmax: float = INT8_QMAX) -> Tuple[jax.Array, int]:
+    """``(clipped, total)`` for a quantized array: how many entries sit AT
+    the ±qmax rail, out of how many.
+
+    With symmetric absmax scaling nothing ever lands OUTSIDE the rail —
+    the block-max element maps to exactly ±qmax by construction — so this
+    is a saturation-pressure census, not an overflow count: a rising clip
+    rate means more of the distribution is crowding the top code, i.e.
+    the block's dynamic range is outgrowing the quantization grid.
+    ``clipped`` is a device scalar (jit-safe); ``total`` is the static
+    element count, so ``clipped + unclipped == total`` is exact."""
+    sat = jnp.abs(q.astype(jnp.float32)) >= float(qmax)
+    return jnp.sum(sat).astype(jnp.float32), int(q.size)
+
+
 # ---------------------------------------------------------------------------
 # int4 nibble packing (weights-only stretch mode)
 # ---------------------------------------------------------------------------
@@ -222,6 +238,48 @@ def quantize_serving_params(params, bits: int = 8):
             return type(node)(walk(v) for v in node)
         return node
     return walk(params)
+
+
+def plane_clip_report(params) -> Dict[str, int]:
+    """Host-side saturation census over every quantized spectral plane in
+    a serving parameter tree: ``{"clipped", "total", "planes"}``.
+
+    Weights are static, so this runs ONCE at engine wiring time (not per
+    dispatch) and feeds the ``quant.clip.plane_*`` counters.  int4-packed
+    (uint8) planes are unpacked to nibbles first and counted against the
+    int4 rail; the odd-length zero pad nibble counts as unclipped (a
+    <=1-per-row dilution of ``total``, noted so the rate reads exact on
+    even frequency counts)."""
+    counts = {"clipped": 0, "total": 0, "planes": 0}
+
+    def census(plane):
+        if plane.dtype == jnp.uint8:
+            q = unpack_int4(plane, 2 * plane.shape[-1])
+            qmax = INT4_QMAX
+        else:
+            q = plane
+            qmax = INT8_QMAX
+        clipped, total = saturation_counts(q, qmax)
+        counts["clipped"] += int(clipped)
+        counts["total"] += total
+        counts["planes"] += 1
+
+    def walk(node):
+        if isinstance(node, dict):
+            for key, v in node.items():
+                if (key.endswith("_cache") and isinstance(v, dict)
+                        and "wr" in v):
+                    for name in PLANE_NAMES:
+                        if name in v and name + SCALE_SUFFIX in v:
+                            census(v[name])
+                else:
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return counts
 
 
 # ---------------------------------------------------------------------------

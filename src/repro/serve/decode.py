@@ -131,10 +131,70 @@ def make_decode_loop(cfg: ArchConfig, steps: int, *, sample: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# Device-side numerics capture (repro.obs.health)
+# ---------------------------------------------------------------------------
+def logit_stats(lg):
+    """``(..., V)`` logits -> ``(..., 4)`` cheap health reductions:
+    ``[absmax, softmax entropy, top1-top2 margin, non-finite count]``.
+
+    One extra pass over a logit row per step — noise next to the matmuls
+    that produced it (the same budget argument as the NaN guard, which
+    is the degenerate binary form of column 3).  Rows containing
+    non-finite values yield non-finite absmax/entropy/margin; consumers
+    (``obs/health.py``) key on column 3 and skip the rest."""
+    r = lg.astype(jnp.float32)
+    nonf = jnp.sum(~jnp.isfinite(r), axis=-1).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(r), axis=-1)
+    m = jnp.max(r, axis=-1, keepdims=True)
+    z = r - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    p = jnp.exp(z - lse[..., None])
+    ent = lse - jnp.sum(p * z, axis=-1)
+    # top-2 margin WITHOUT lax.top_k (a full sort on CPU, ~20x the cost
+    # of every other reduction here combined): mask exactly the argmax
+    # position and re-max — tie semantics identical to top_k (margin 0)
+    idx = jnp.argmax(r, axis=-1)
+    vocab = jax.lax.broadcasted_iota(jnp.int32, r.shape, r.ndim - 1)
+    r2 = jnp.where(vocab == idx[..., None], -jnp.inf, r)
+    margin = m[..., 0] - jnp.max(r2, axis=-1)
+    return jnp.stack([absmax, ent, margin, nonf], axis=-1)
+
+
+def cache_group_absmax(cache):
+    """Per-layer-group activation absmax over a dense cache's K/V leaves.
+
+    The prefill cache is the one place every layer group's activations
+    are already materialized (the paged pool only ever holds quantized
+    pages), so prefill dispatches carry this fixed-shape vector out as a
+    health side-output: a datapath drifting toward overflow marches up
+    the ``health.act_absmax`` buckets layers before logits go non-finite."""
+    out = []
+
+    def walk(node):
+        if isinstance(node, dict) and "k" in node and "v" in node:
+            for key in ("k", "v"):
+                leaf = node[key]
+                out.append(jnp.max(jnp.abs(leaf.astype(jnp.float32)),
+                                   axis=tuple(range(1, leaf.ndim))))
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(cache)
+    if not out:
+        return jnp.zeros((1,), jnp.float32)
+    return jnp.concatenate([jnp.atleast_1d(a) for a in out])
+
+
+# ---------------------------------------------------------------------------
 # Paged continuous-batching builders (serve/kvcache.py + serve/scheduler.py)
 # ---------------------------------------------------------------------------
 def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
-                           page_size: int) -> Callable:
+                           page_size: int,
+                           capture_stats: bool = False) -> Callable:
     """B=1 exact-position prefill + page scatter, one dispatch per admission.
 
     The prompt is right-padded to ``n_pages * page_size`` (a page-aligned
@@ -145,11 +205,22 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
     ``i <= slot position``).
 
     Returns ``prefill_pack(params, batch, pool, pages, true_len)`` ->
-    ``(first_token scalar int32, ok scalar bool, pool)`` — the first token
-    is the greedy argmax at the prompt's true last position (same op the
-    batch engine runs on its prefill logits); ``ok`` is a cheap device-side
-    finiteness check on those logits (False = the slot is poisoned and the
-    engine retires it FAILED instead of streaming garbage).
+    ``(first_token scalar int32, ok scalar bool, pool, stats)`` — the first
+    token is the greedy argmax at the prompt's true last position (same op
+    the batch engine runs on its prefill logits); ``ok`` is a cheap
+    device-side finiteness check on those logits (False = the slot is
+    poisoned and the engine retires it FAILED instead of streaming
+    garbage).
+
+    With ``capture_stats`` (the obs-enabled engines) ``stats`` is ONE
+    flat fixed-shape f32 vector of health reductions —
+    ``[logit_stats(4) | kv_clipped | kv_total | act_absmax per layer
+    group]`` — packed device-side so the host pays a single transfer per
+    prefill (four small device_gets per dispatch showed up in the
+    obs_overhead budget); the engine slices it and hands
+    ``obs/health.py`` the pieces after the fence.  Without it ``stats``
+    is None and the compiled program is byte-identical to the pre-health
+    one (the disabled arm of the ``obs_overhead`` bench stays honest).
     """
     from . import kvcache as kvc
     model = build_model(cfg)
@@ -162,9 +233,20 @@ def make_prefill_pack_step(cfg: ArchConfig, n_pages: int,
                                             keepdims=False)
         ok = jnp.all(jnp.isfinite(last))
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        pool = kvc.pack_prefill_cache(pool, dense, pages, page_size,
-                                      true_len=true_len)
-        return nxt, ok, pool
+        if capture_stats:
+            pool, clipped, total = kvc.pack_prefill_cache(
+                pool, dense, pages, page_size, true_len=true_len,
+                with_stats=True)
+            stats = jnp.concatenate([
+                logit_stats(last),
+                jnp.stack([jnp.asarray(clipped, jnp.float32),
+                           jnp.asarray(total, jnp.float32)]),
+                cache_group_absmax(dense)])
+        else:
+            pool = kvc.pack_prefill_cache(pool, dense, pages, page_size,
+                                          true_len=true_len)
+            stats = None
+        return nxt, ok, pool, stats
     return prefill_pack
 
 
@@ -173,7 +255,8 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                            eos_id: Optional[int] = None, seed: int = 0,
                            logits_sharding=None,
                            paged_impl: str = "stream",
-                           nan_guard: bool = True) -> Callable:
+                           nan_guard: bool = True,
+                           capture_stats: bool = False) -> Callable:
     """Device-resident decode over paged slots: one dispatch per ``chunk``.
 
     The carry holds per-slot (token, position, remaining budget, done) —
@@ -199,7 +282,25 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
     garbage tokens.
 
     Returns ``decode_loop(params, cur, pool, table, pos, rem)`` ->
-    ``(buf (B, chunk) int32, cur, pool, pos, rem, done, anom)``.
+    ``(buf (B, chunk) int32, cur, pool, pos, rem, done, anom, stats)``.
+
+    With ``capture_stats``, ``stats`` is a ``(B, 4)`` float32 row per
+    slot — ``[logit absmax, entropy, top1-margin, non-finite step count]``
+    (``logit_stats`` columns).  Columns 0–2 are SAMPLED once per
+    dispatch: the loop carries each slot's latest finite-step logit row
+    (a masked 12 KB copy per step — noise) and the reductions run ONCE
+    on it AFTER the ``while_loop``.  Computing them per step cost ~9% of
+    the decode program, and hiding them behind an in-loop ``lax.cond``
+    did not help (XLA rewrites small conditionals inside loops into
+    both-branch selects).  Column 3 stays exact and per-step: it
+    accumulates the NaN guard's ``bad`` mask, which the program computes
+    every step regardless, so the ``anom`` mask remains the thresholded
+    view of this column and anomalies surface on the exact dispatch they
+    occur.  The carried row is gated on ``finite & ~halt``, so a
+    poisoned step can never corrupt the sample.  Idle/never-advanced
+    slots keep an all-zero carried row (margin +inf after reduction);
+    the engine skips rows that took no step.  Without ``capture_stats``,
+    ``stats`` is None and the compiled loop is unchanged.
 
     Telemetry contract (repro.obs): dispatch is async, so the engine
     fences the loop outputs (``jax.block_until_ready``) before stamping a
@@ -218,6 +319,7 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
             logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
         finite = (jnp.all(jnp.isfinite(logits[:, -1]), axis=-1)
                   if nan_guard else jnp.ones(cur.shape[0], bool))
+        lastlg = logits[:, -1] if capture_stats else None
         if sample:
             # fold in slot index AND position: slots at the same position
             # (e.g. identical prompts admitted together) must not draw from
@@ -231,25 +333,40 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
                 keys, logits[:, -1])
         else:
             nxt = jnp.argmax(logits[:, -1], axis=-1)
-        return nxt.astype(jnp.int32), finite, pool
+        return nxt.astype(jnp.int32), finite, pool, lastlg
 
     def decode_loop(params, cur, pool, table, pos, rem):
         B = cur.shape[0]
         done0 = rem <= 0
         anom0 = jnp.zeros(B, bool)
         buf = jnp.full((B, chunk), fill, jnp.int32)
+        # carry = (latest finite-step logit row, per-step nonfinite count);
+        # the reductions run once AFTER the loop (docstring)
+        stats0 = ((jnp.zeros((B, cfg.vocab_size), jnp.float32),
+                   jnp.zeros((B,), jnp.float32))
+                  if capture_stats else None)
 
         def cond_fn(st):
             return jnp.logical_and(st[0] < chunk, ~jnp.all(st[6]))
 
         def body_fn(st):
-            j, buf_, cur_, pool_, pos_, rem_, done_, anom_ = st
+            j, buf_, cur_, pool_, pos_, rem_, done_, anom_, stats_ = st
             masked = jnp.where(done_, -1, pos_)
-            nxt, finite, pool_ = step(params, cur_, pool_, masked, table)
+            nxt, finite, pool_, lastlg = step(params, cur_, pool_, masked,
+                                              table)
             # a poisoned slot freezes like EOS: no token, no advance — the
             # bad logits never pick a token and the slot retires FAILED
             bad = ~done_ & ~finite
             halt = done_ | bad
+            if capture_stats:
+                lastrow, nonf = stats_
+                # keep the latest FINITE active row per slot (a poisoned
+                # row never lands in the sample); non-finite accounting
+                # is exact because ``bad`` rides the per-step NaN guard
+                upd = (~halt & finite)[:, None]
+                lastrow = jnp.where(upd, lastlg.astype(jnp.float32),
+                                    lastrow)
+                stats_ = (lastrow, nonf + bad.astype(jnp.float32))
             tok = jnp.where(halt, jnp.int32(fill), nxt)
             buf_ = jax.lax.dynamic_update_slice(buf_, tok[:, None], (0, j))
             pos_ = jnp.where(halt, pos_, pos_ + 1)
@@ -258,10 +375,14 @@ def make_paged_decode_loop(cfg: ArchConfig, chunk: int, *,
             if eos_id is not None:
                 nd = nd | (~halt & (nxt == eos_id))
             cur_ = jnp.where(halt, cur_, nxt)
-            return (j + 1, buf_, cur_, pool_, pos_, rem_, nd, anom_ | bad)
+            return (j + 1, buf_, cur_, pool_, pos_, rem_, nd,
+                    anom_ | bad, stats_)
 
-        st = (jnp.int32(0), buf, cur, pool, pos, rem, done0, anom0)
-        _, buf, cur, pool, pos, rem, done, anom = jax.lax.while_loop(
+        st = (jnp.int32(0), buf, cur, pool, pos, rem, done0, anom0, stats0)
+        _, buf, cur, pool, pos, rem, done, anom, stats = jax.lax.while_loop(
             cond_fn, body_fn, st)
-        return buf, cur, pool, pos, rem, done, anom
+        if capture_stats:
+            lastrow, nonf = stats
+            stats = logit_stats(lastrow).at[:, 3].set(nonf)
+        return buf, cur, pool, pos, rem, done, anom, stats
     return decode_loop

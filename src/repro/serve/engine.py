@@ -43,7 +43,8 @@ from ..launch import mesh as mesh_lib
 from ..models import transformer as tfm
 from ..models.registry import build_model
 from ..obs import BYTES_BUCKETS, RATIO_BUCKETS, Obs, aot_compile
-from ..quant.codec import QuantPolicy
+from ..obs.health import SCALE_BUCKETS, HealthPlane, ShadowOracle
+from ..quant.codec import QuantPolicy, plane_clip_report
 from . import decode as dec
 from . import kvcache as kvc
 from .params import precompute_serving_params
@@ -377,7 +378,9 @@ class ContinuousEngine:
                  max_queue: Optional[int] = None,
                  max_preemptions: int = 4,
                  nan_guard: bool = True,
-                 faults=None):
+                 faults=None,
+                 shadow_sample: float = 0.0,
+                 capture: Optional[bool] = None):
         if paged_attn not in ("stream", "gather"):
             raise ValueError(f"paged_attn {paged_attn!r}: "
                              f"expected 'stream' or 'gather'")
@@ -387,8 +390,9 @@ class ContinuousEngine:
                              f"{'; '.join(reasons)} — use Engine")
         self.cfg = cfg
         self.quant = quant or QuantPolicy()
+        raw_params = params                 # pre-precompute tree (shadow
         self.params = (precompute_serving_params(params, cfg, self.quant)
-                       if precompute else params)
+                       if precompute else params)  # oracle replays from it)
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.page_size = page_size
@@ -433,6 +437,15 @@ class ContinuousEngine:
         # and scheduler write their own gauges/counters into it
         self.obs = obs if obs is not None else Obs()
         reg = self.obs.registry
+        # numerics capture rides obs.enabled: disabled obs compiles the
+        # exact pre-health device programs (stats leaves are None pytree
+        # leaves, not zero-filled buffers), so the obs_overhead bench's
+        # disabled arm stays an honest baseline.  ``capture=False`` opts
+        # an enabled-obs engine out of the health plane — the bench's
+        # middle arm, which isolates the capture's incremental price from
+        # the rest of the telemetry stack.
+        self._capture = (self.obs.enabled if capture is None
+                         else bool(capture) and self.obs.enabled)
         self.faults = faults
         self.block_table = kvc.BlockTable(
             kvc.PageAllocator(num_pages, registry=reg,
@@ -456,7 +469,7 @@ class ContinuousEngine:
         self._loop = jax.jit(dec.make_paged_decode_loop(
             cfg, decode_chunk, sample=sample, temperature=temperature,
             eos_id=eos_id, seed=seed, paged_impl=paged_attn,
-            nan_guard=nan_guard),
+            nan_guard=nan_guard, capture_stats=self._capture),
             donate_argnums=(2,))
         # AOT executable + DispatchCost for the one decode program,
         # captured at the first dispatch (obs/prof.py); prefill buckets
@@ -481,17 +494,65 @@ class ContinuousEngine:
         # per-position attention byte term for the live bytes/token series
         self._attn_per_pos = kvc.attention_bytes_per_position(
             self.pool)["per_pos"]
-        # host shadow of the int8 pool's scales: decode-dispatch diffs
+        # numerics health plane (obs/health.py): folds the fixed-shape
+        # stats side-outputs the captured device programs return, so the
+        # binary NaN guard above becomes the degenerate case of labelled
+        # absmax/entropy/margin histograms + non-finite counters
+        self._health = HealthPlane(reg) if self._capture else None
+        # quant clip telemetry: saturation pressure, not overflow — with
+        # absmax scaling the block max sits AT the rail by construction,
+        # so plane_clip_rate/kv_clip_rate read as "fraction of values at
+        # the quantization rail" (docs/quantization.md)
+        self._c_kv_clip = reg.counter("quant.clip.kv_clipped")
+        self._c_kv_total = reg.counter("quant.clip.kv_total")
+        self._g_kv_clip = reg.gauge("quant.kv_clip_rate")
+        if self._capture and self.quant.quant_weights:
+            prep = plane_clip_report(self.params)
+            reg.counter("quant.clip.plane_clipped").inc(prep["clipped"])
+            reg.counter("quant.clip.plane_total").inc(prep["total"])
+            reg.gauge("quant.plane_clip_rate").set(
+                prep["clipped"] / max(prep["total"], 1))
+        # host shadow of the int8 pool's k/v scales: decode-dispatch diffs
         # count page-scatter requantize-on-grow events (scales only GROW)
-        self._scales_host = (kvc.pool_scales(self.pool)
-                             if self.obs.enabled and self.quant.kv_quantized
+        # and feed the scale histograms + requant-error accounting
+        self._scales_host = (kvc.pool_scale_map(self.pool)
+                             if self._capture and self.quant.kv_quantized
                              else None)
+        self._h_scale = {}
+        if self._scales_host is not None:
+            for k in ("k_scale", "v_scale"):
+                self._h_scale[k] = reg.histogram("quant." + k,
+                                                 bounds=SCALE_BUCKETS)
+            self._h_grow = reg.histogram("quant.scale_grow_ratio",
+                                         bounds=RATIO_BUCKETS)
+            # running bound on requantize error: a grown page rescales its
+            # resident int8 values; per element the round-off is at most
+            # new_scale/2, accumulated here per grown (page, head) group
+            self._c_requant = reg.counter("quant.requant_error_bound")
+        # shadow-oracle sampling (obs/health.py): replay a fraction of
+        # FINISHED requests through the f32 dense-cache oracle between
+        # dispatches — online greedy_agreement/logit_drift on the same
+        # teacher-forced harness quant/calibrate.py runs offline
+        self._shadow = None
+        if shadow_sample > 0.0:
+            if not precompute:
+                raise ValueError("shadow_sample needs precompute=True: the "
+                                 "oracle precomputes f32 serving params "
+                                 "from the raw tree")
+            self._shadow = ShadowOracle(cfg, raw_params, policy=self.quant,
+                                        registry=reg, sample=shadow_sample,
+                                        seed=seed, page_size=page_size)
         self._traces: Dict[int, object] = {}     # submission order -> trace
         self._t0_perf = None                # serve-clock origin (perf)
         self._results: Dict[int, Dict] = {}      # order -> terminal result
         self._cancels: set = set()          # request ids pending cancel
         self._stall_streak = 0              # consecutive all-stalled rounds
         self._stall_limit = 3               # then FAIL the youngest stalled
+        # birth snapshot: every counter above now exists at its true zero,
+        # so SLO rate windows cover the whole serve — a guard trip before
+        # the first emit_every tick still lands in a visible delta
+        # (obs/slo.py rate rules skip the baseline-less first snapshot)
+        self.obs.baseline()
 
     # -- jit caches -------------------------------------------------------
     def _prefill_exec(self, n_pages: int, args) -> tuple:
@@ -501,7 +562,8 @@ class ContinuousEngine:
         ent = self._prefills.get(n_pages)
         if ent is None:
             jitfn = jax.jit(dec.make_prefill_pack_step(
-                self.cfg, n_pages, self.page_size), donate_argnums=(2,))
+                self.cfg, n_pages, self.page_size,
+                capture_stats=self._capture), donate_argnums=(2,))
             ent = aot_compile(jitfn, args, self.obs.profiler,
                               dec.prefill_kind(n_pages))
             self._prefills[n_pages] = ent
@@ -608,6 +670,8 @@ class ContinuousEngine:
                 if not self._step(self._now()):
                     raise RuntimeError("drain stall: in-flight work cannot "
                                        "make progress")
+            if self._shadow is not None:
+                self._shadow.drain()
         self.obs.close()
         return [self._results[o] for o in sorted(set(self._results) - before)]
 
@@ -658,6 +722,10 @@ class ContinuousEngine:
                     raise RuntimeError(
                         "scheduler stall: queued request cannot be admitted "
                         "into an idle engine (budget/pool too small)")
+            if self._shadow is not None:
+                # flush pending replays so short runs still publish
+                # agreement/drift before the caller reads stats()
+                self._shadow.drain()
         return [self._results.pop(o) for o in orders]
 
     def _step(self, now_s: float,
@@ -723,6 +791,8 @@ class ContinuousEngine:
                 victim = max(prep.stalled, key=lambda s: s.order)
                 self._finish(victim, FAILED)
                 self._stall_streak = 0
+        if self._shadow is not None:
+            self._shadow.tick()     # at most one replay, off the hot path
         self.obs.tick()             # emitter rides the dispatch cadence
         return progress
 
@@ -745,11 +815,13 @@ class ContinuousEngine:
                             jnp.int32)
         fn, cost = self._prefill_exec(
             n_pages, (self.params, batch, self.pool, pages, jnp.int32(S)))
-        nxt, ok, self.pool = fn(
+        nxt, ok, self.pool, pstats = fn(
             self.params, batch, self.pool, pages, jnp.int32(S))
-        # fence the whole dispatch (token AND page scatter) so the prefill
-        # span — and the trace's first-token mark — measure device work
-        jax.block_until_ready((nxt, self.pool))
+        # fence the whole dispatch (token, page scatter AND the numerics
+        # side-output) so the prefill span — and the trace's first-token
+        # mark — measure device work, not a later host sync
+        jax.block_until_ready((nxt, self.pool) if pstats is None
+                              else (nxt, self.pool, pstats))
         t1 = time.perf_counter()
         self.obs.profiler.on_dispatch(cost, self.obs.rebase(t0),
                                       self.obs.rebase(t1))
@@ -758,6 +830,21 @@ class ContinuousEngine:
         self._ctr["prompt_tokens"].inc(S)
         self._ctr["padded_prompt_tokens"].inc(spad)
         slot.prefill_s = dt
+        if self._health is not None and pstats is not None:
+            # fold BEFORE the guard branch: a poisoned prefill must bump
+            # health.nonfinite_* in the same dispatch the guard retires it.
+            # The device packs everything into ONE flat vector
+            # [logit(4) | kv_clipped | kv_total | act_absmax...] so this
+            # is a single device->host transfer per prefill, not four.
+            arr = np.asarray(pstats, dtype=np.float64)
+            self._health.on_prefill({"logit": arr[:4],
+                                     "act_absmax": arr[6:]})
+            kv_total = float(arr[5])
+            if kv_total > 0:
+                self._c_kv_clip.inc(float(arr[4]))
+                self._c_kv_total.inc(kv_total)
+                self._g_kv_clip.set(self._c_kv_clip.value
+                                    / max(self._c_kv_total.value, 1.0))
         if self.nan_guard and not bool(ok):
             # poisoned prefill: never stream a garbage first token
             self._c_anom.inc()
@@ -791,8 +878,16 @@ class ContinuousEngine:
                     tr.mark_chunk(t_first, 1)
             if self._scales_host is not None:
                 # prefill packs fresh pages (new scales, not grow events):
-                # refresh the shadow so the next decode diff is clean
-                self._scales_host = kvc.pool_scales(self.pool)
+                # refresh the shadow so the next decode diff is clean, and
+                # census the freshly written scales into the saturation
+                # histograms
+                new = kvc.pool_scale_map(self.pool)
+                for k, h in self._h_scale.items():
+                    fresh = new[k][(new[k] != self._scales_host[k])
+                                   & (new[k] > 0)]
+                    for sc in fresh.tolist():
+                        h.observe(float(sc))
+                self._scales_host = new
         if (len(slot.tokens) >= slot.total_budget
                 or (self.eos_id is not None and first == self.eos_id)):
             self._rem[slot.index] = 0
@@ -829,13 +924,15 @@ class ContinuousEngine:
                  jnp.asarray(rem_dispatch)),
                 self.obs.profiler, dec.DECODE_CHUNK_KIND)
         loop, loop_cost = self._loop_exec
-        buf, cur, self.pool, pos, rem, done, anom = loop(
+        buf, cur, self.pool, pos, rem, done, anom, dstats = loop(
             self.params, jnp.asarray(self._cur), self.pool,
             self._dev_table, jnp.asarray(self._pos),
             jnp.asarray(rem_dispatch))
         # fence before the span boundary: the decode_chunk wall time (and
-        # the per-chunk trace marks) measure the device program
-        jax.block_until_ready(buf)
+        # the per-chunk trace marks) measure the device program — the
+        # numerics side-output fences with it, so the health fold below
+        # is a pure host read
+        jax.block_until_ready(buf if dstats is None else (buf, dstats))
         t1 = time.perf_counter()
         self.obs.profiler.on_dispatch(loop_cost, self.obs.rebase(t0),
                                       self.obs.rebase(t1))
@@ -855,11 +952,29 @@ class ContinuousEngine:
         if self.obs.enabled:
             self._h_chunk.observe(dt)
             self._h_occup.observe(len(runnable) / max(self.max_slots, 1))
+            if self._health is not None and dstats is not None:
+                # steps[b] = tokens slot b advanced this dispatch: rows
+                # with 0 still carry init sentinels (or stale maxima from
+                # the donated carry) and are skipped by the fold
+                self._health.on_decode(np.asarray(dstats),
+                                       steps=rem_dispatch - rem_after)
             if self._scales_host is not None:
-                scales = kvc.pool_scales(self.pool)
-                self._c_growths.inc(
-                    int((scales > self._scales_host).sum()))
-                self._scales_host = scales
+                new = kvc.pool_scale_map(self.pool)
+                grown = 0
+                for k, old in self._scales_host.items():
+                    g = new[k] > old
+                    if g.any():
+                        grown += int(g.sum())
+                        ns, olds = new[k][g], old[g]
+                        # per-element round-off of a rescale is bounded by
+                        # new_scale/2; accumulate the per-group bound
+                        self._c_requant.inc(float(0.5 * ns.sum()))
+                        for s_old, s_new in zip(olds.tolist(), ns.tolist()):
+                            if s_new > 0:
+                                self._h_grow.observe(s_old / s_new)
+                            self._h_scale[k].observe(s_new)
+                self._c_growths.inc(grown)
+                self._scales_host = new
         t_chunk = self.obs.rebase(t1)
         for slot in runnable:
             b = slot.index
@@ -893,6 +1008,13 @@ class ContinuousEngine:
                       if (self.eos_id is not None and toks
                           and toks[-1] == self.eos_id)
                       else FINISHED_BUDGET)
+        if (self._shadow is not None
+                and status in (FINISHED_EOS, FINISHED_BUDGET)):
+            # only cleanly finished requests are parity-replayable (their
+            # full greedy trajectory exists); the replay itself happens
+            # between dispatches, in _step / drain
+            self._shadow.maybe_enqueue(np.asarray(slot.request.prompt),
+                                       len(slot.tokens))
         now = self._now()
         prefill_s = getattr(slot, "prefill_s", 0.0)
         arrival, admit = slot.arrival_s, slot.admit_s
@@ -981,6 +1103,13 @@ class ContinuousEngine:
         st["pages_alloc"] = int(v("pool.pages_alloc"))
         st["pages_freed"] = int(v("pool.pages_freed"))
         st["scale_growths"] = int(v("quant.scale_growths"))
+        kv_total = v("quant.clip.kv_total")
+        st["kv_clip_rate"] = (v("quant.clip.kv_clipped") / kv_total
+                              if kv_total else None)
+        if self._health is not None:
+            st["health"] = self._health.stats()
+        if self._shadow is not None:
+            st["shadow_oracle"] = self._shadow.stats()
         st["pool_bytes"] = kvc.pool_bytes(self.pool)
         st["kv_pool_bytes"] = st["pool_bytes"]     # quant-satellite alias
         st["quant_policy"] = self.quant.describe()

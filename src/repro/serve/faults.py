@@ -32,7 +32,11 @@ and injected faults, then asserts the lifecycle invariants:
 3. non-faulted finished requests are token-identical to the B=1 batch
    oracle (greedy; preemption-and-recompute must be invisible), and
    partially-served terminals (cancel/timeout) are a PREFIX of the
-   oracle's tokens.
+   oracle's tokens,
+4. the numerics health plane (obs/health.py) surfaces every NaN-guard
+   trip (``health.nonfinite_dispatches >= anomalies``) and, when any
+   anomaly fired, the stock SLO watchdog emitted at least one
+   ``anomaly-burst`` alert record (validated in the JSONL output).
 
 Poisoned pages are safe to recycle: prefill packs whole pages before any
 position becomes valid, decode overwrites a position before its validity
@@ -215,7 +219,7 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
 
     from ..configs import registry as config_registry
     from ..models.registry import build_model
-    from ..obs import Obs
+    from ..obs import Obs, SloWatchdog
     from .engine import ContinuousEngine, Engine
 
     cfg = config_registry.get_smoke_config(arch)
@@ -235,8 +239,11 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
     faults = FaultInjector(FaultConfig(
         seed=seed, alloc_fail_p=0.05, dispatch_delay_p=0.1,
         dispatch_delay_s=0.002, corrupt_p=0.08))
-    obs = (Obs(emit_path=metrics_out, emit_every=5)
-           if metrics_out else Obs())
+    # the stock SLO watchdog rides the snapshot cadence: injected NaN
+    # poison must surface as anomaly-burst alert records
+    watchdog = SloWatchdog()
+    obs = (Obs(emit_path=metrics_out, emit_every=5, slo=watchdog)
+           if metrics_out else Obs(slo=watchdog))
     # a small pool (half the slots' full-grown footprint) forces organic
     # page pressure on top of the injected allocator failures
     eng = ContinuousEngine(
@@ -310,9 +317,29 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
             mismatches.append((r.id, f"prefix {got} != oracle {want}"))
     assert not mismatches, f"oracle divergence: {mismatches}"
 
+    # -- invariant 4: the numerics health plane saw every guard trip ------
+    # a guard retirement and its health.nonfinite_* bump land in the SAME
+    # fenced dispatch, so the plane surfaces the anomaly at or before the
+    # NaN guard does (one poisoned dispatch can trip several slots' rows,
+    # hence >=)
+    st = eng.stats()
+    anomalies = st["anomalies"]
+    health = st.get("health") or {}
+    assert health.get("nonfinite_dispatches", 0) >= anomalies, (
+        f"health plane missed guard trips: nonfinite_dispatches="
+        f"{health.get('nonfinite_dispatches')} < anomalies={anomalies}")
+    if anomalies > 0:
+        assert watchdog.stats()["by_rule"].get("anomaly-burst", 0) >= 1, (
+            f"{anomalies} anomalies but no anomaly-burst alert fired "
+            f"(watchdog={watchdog.stats()})")
+
     if metrics_out:
         from ..obs.emit import validate_jsonl
-        validate_jsonl(metrics_out)
+        counts = validate_jsonl(metrics_out)
+        if anomalies > 0:
+            assert counts["alert"] >= 1, (
+                f"{anomalies} anomalies but no alert record in "
+                f"{metrics_out}: {counts}")
 
     summary = {
         "arch": arch,
@@ -322,7 +349,9 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
         "steps": steps,
         "statuses": term_counts,
         "preemptions": eng.scheduler.preempted,
-        "anomalies": eng.stats()["anomalies"],
+        "anomalies": anomalies,
+        "health": health,
+        "alerts": watchdog.stats(),
         "faults": faults.stats(),
     }
     if verbose:
@@ -331,6 +360,7 @@ def run_chaos(arch: str = "tinyllama-1.1b", seed: int = 0,
               f"statuses={term_counts}, "
               f"preemptions={summary['preemptions']}, "
               f"anomalies={summary['anomalies']}, "
+              f"alerts={watchdog.stats()['alerts']}, "
               f"faults={faults.stats()}")
     return summary
 

@@ -253,7 +253,7 @@ def build_pool(cfg: ArchConfig, num_pages: int, page_size: int,
 
 
 def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int,
-                       true_len=None):
+                       true_len=None, with_stats: bool = False):
     """Scatter a B=1 dense prefill cache into a slot's reserved pages.
 
     ``dense_cache`` leaves are (n, 1, Spad, Hkv, D) with Spad a multiple of
@@ -269,7 +269,17 @@ def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int,
     sharing that page (the tail itself stays position-masked on read and
     is overwritten by decode either way).  Unquantized pools ignore
     ``true_len`` (garbage tail values are free when no scale reads them).
+
+    With ``with_stats`` the return becomes ``(pool, clipped, total)`` —
+    device scalar counts of page-write values saturating the int8 rail
+    (|q| == qmax) and of values written, both restricted to VALID
+    (non-pad) positions.  With absmax scaling the block-max element sits
+    at the rail by construction, so the clip rate is a saturation-
+    pressure signal, not an overflow count (docs/quantization.md); f32
+    pools report zeros.
     """
+    acc = {"clipped": jnp.float32(0.0), "total": jnp.float32(0.0)}
+
     def pack(pnode, dnode):
         if _is_kv_leaf(pnode):
             out = {}
@@ -279,12 +289,24 @@ def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int,
                 npg = spad // page_size
                 vals = leaf.reshape(n, npg, page_size, hkv, d)
                 if key + "_scale" in pnode:             # int8 pool
+                    valid = None
                     if true_len is not None:
                         valid = (jnp.arange(spad) < true_len).reshape(
                             npg, page_size)
                         vals = jnp.where(
                             valid[None, :, :, None, None], vals, 0.0)
                     qvals, scales = quantize_page_block(vals)
+                    if with_stats:
+                        sat = jnp.abs(qvals.astype(jnp.int32)) >= 127
+                        if valid is not None:
+                            mask = valid[None, :, :, None, None]
+                            sat = sat & mask
+                            nvalid = (jnp.sum(valid).astype(jnp.float32)
+                                      * n * hkv * d)
+                        else:
+                            nvalid = jnp.float32(qvals.size)
+                        acc["clipped"] += jnp.sum(sat).astype(jnp.float32)
+                        acc["total"] += nvalid
                     out[key] = pnode[key].at[:, pages].set(qvals)
                     out[key + "_scale"] = pnode[
                         key + "_scale"].at[:, pages].set(scales)
@@ -298,7 +320,10 @@ def pack_prefill_cache(pool, dense_cache, pages: jax.Array, page_size: int,
             return type(pnode)(pack(v, d) for v, d in zip(pnode, dnode))
         raise ValueError(f"unexpected pool node {pnode!r}")
 
-    return pack(pool, dense_cache)
+    packed = pack(pool, dense_cache)
+    if with_stats:
+        return packed, acc["clipped"], acc["total"]
+    return packed
 
 
 def pool_bytes(pool) -> int:
@@ -375,6 +400,33 @@ def pool_scales(pool) -> Optional[np.ndarray]:
     if not leaves:
         return None
     return np.concatenate(leaves)
+
+
+def pool_scale_map(pool) -> Optional[Dict[str, np.ndarray]]:
+    """Like ``pool_scales`` but split per plane:
+    ``{"k_scale": flat, "v_scale": flat}`` host copies (or None for an
+    unquantized pool).  The engine's scale-shadow diff uses this to
+    attribute requantize-on-grow events and the saturation histograms to
+    the K vs V plane separately (``quant.k_scale`` / ``quant.v_scale``,
+    docs/observability.md "Numerics & quality health")."""
+    leaves: Dict[str, list] = {"k_scale": [], "v_scale": []}
+
+    def walk(node):
+        if _is_kv_leaf(node):
+            for key in ("k_scale", "v_scale"):
+                if key in node:
+                    leaves[key].append(np.asarray(node[key]).ravel())
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pool)
+    if not any(leaves.values()):
+        return None
+    return {k: np.concatenate(v) for k, v in leaves.items() if v}
 
 
 def attention_memory_est(pool, max_slots: int, max_pages_per_slot: int,

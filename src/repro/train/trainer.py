@@ -11,6 +11,12 @@ Production posture (DESIGN.md §7), exercised at host scale by the examples:
   hangs by heartbeat age, the restart path is just "run the same command";
 * deterministic step-indexed data: no pipeline state to restore, stragglers
   never desynchronize the batch contents.
+
+Telemetry rides the same ``repro.obs`` plane the serving stack uses: pass
+``obs=`` (or let the trainer build one) and every step lands step-time /
+loss / grad-norm / tokens-per-second in the shared registry — with an
+emitter attached the snapshots stream to JSONL on the usual cadence.  The
+heartbeat file keeps its own format (the watchdog contract predates obs).
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 
 from . import checkpoint as ckpt
 from . import train_step as ts
+from ..obs import Obs
 from ..optim import adamw, schedule
 
 
@@ -34,7 +41,8 @@ class Trainer:
                  total_steps: int = 100, ckpt_every: int = 50,
                  accum: int = 1, log_every: int = 10,
                  compress_grads: bool = False, bayesian_mode: bool = False,
-                 heartbeat_timeout: float = 600.0, lr_schedule=None):
+                 heartbeat_timeout: float = 600.0, lr_schedule=None,
+                 obs: Optional[Obs] = None):
         self.cfg = cfg
         self.opt_cfg = opt_cfg or adamw.AdamWConfig()
         self.workdir = workdir
@@ -43,6 +51,15 @@ class Trainer:
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.heartbeat_timeout = heartbeat_timeout
+        self.obs = obs if obs is not None else Obs()
+        reg = self.obs.registry
+        self._c_steps = reg.counter("train.steps")
+        self._c_tokens = reg.counter("train.tokens")
+        self._c_skipped = reg.counter("train.skipped_steps")
+        self._h_step = reg.histogram("train.step_s")
+        self._g_loss = reg.gauge("train.loss")
+        self._g_gnorm = reg.gauge("train.grad_norm")
+        self._g_tps = reg.gauge("train.tokens_per_s")
         os.makedirs(workdir, exist_ok=True)
         lr_fn = lr_schedule or (
             lambda step: schedule.warmup_cosine(
@@ -115,9 +132,27 @@ class Trainer:
         state = self._state
         start = int(state["step"])
         ckpt_dir = os.path.join(self.workdir, "ckpt")
+        skipped0 = int(state["skipped"])
         for step in range(start, self.total_steps):
+            t0 = time.perf_counter()
             batch = self.data_fn(step)
             state, metrics = self.step_fn(state, batch)
+            ntok = int(batch["tokens"].size)
+            self._c_steps.inc()
+            self._c_tokens.inc(ntok)
+            if self.obs.enabled:
+                # fence so step_s measures device work, not dispatch
+                # latency; with obs disabled steps stay async-pipelined
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self._h_step.observe(dt)
+                self._g_loss.set(float(metrics["loss"]))
+                self._g_gnorm.set(float(metrics["grad_norm"]))
+                self._g_tps.set(ntok / max(dt, 1e-9))
+                skipped = int(state["skipped"])
+                if skipped > skipped0:
+                    self._c_skipped.inc(skipped - skipped0)
+                    skipped0 = skipped
             if (step + 1) % self.log_every == 0 or step == start:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step + 1
@@ -126,6 +161,7 @@ class Trainer:
                       f"loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f} "
                       f"skipped={int(state['skipped'])}", flush=True)
             self._heartbeat(step + 1)
+            self.obs.tick()                # emitter rides the step cadence
             if (step + 1) % self.ckpt_every == 0 or self._preempted:
                 ckpt.save(ckpt_dir, step + 1, state)
                 if self._preempted:

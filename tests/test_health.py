@@ -1,0 +1,472 @@
+"""Numerics & quality health plane (docs/observability.md):
+device-side capture folds, quant clip/saturation accounting, the
+shadow-oracle sampler, SLO watchdog burn-rate semantics, and the
+acceptance bar — online shadow greedy agreement pinned to the offline
+``quant/calibrate.py`` harness within one percentage point."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+from repro.obs import Obs, validate_line
+from repro.obs.health import HealthPlane, ShadowOracle
+from repro.obs.metrics import Registry
+from repro.obs.slo import Rule, SloWatchdog, default_rules
+from repro.quant.codec import (INT8_QMAX, QuantPolicy, absmax_scale,
+                               plane_clip_report, quantize,
+                               saturation_counts)
+from repro.serve.engine import ContinuousEngine, Request
+from repro.serve.faults import FaultConfig, FaultInjector
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Clip / saturation accounting (quant/codec.py)
+# ---------------------------------------------------------------------------
+def _clip_conserves(x: np.ndarray):
+    """clipped + unclipped == total, exactly, and splitting the array
+    never changes the totals (the counters are pure sums)."""
+    x = jnp.asarray(x, jnp.float32)
+    scale = absmax_scale(x, axes=None)
+    q = quantize(x, scale)
+    clipped, total = saturation_counts(q)
+    clipped = int(clipped)
+    assert total == x.size
+    assert 0 <= clipped <= total
+    unclipped = int(jnp.sum(jnp.abs(q.astype(jnp.float32)) < INT8_QMAX))
+    assert clipped + unclipped == total
+    if x.size and float(jnp.max(jnp.abs(x))) > 0:
+        # absmax scaling puts the block max AT the rail by construction
+        assert clipped >= 1
+    # split-invariance: per-half censuses sum to the whole
+    if x.size >= 2:
+        h = x.size // 2
+        flat = q.reshape(-1)
+        c0, t0 = saturation_counts(flat[:h])
+        c1, t1 = saturation_counts(flat[h:])
+        assert int(c0) + int(c1) == clipped and t0 + t1 == total
+
+
+def test_clip_conservation_deterministic():
+    rng = np.random.RandomState(0)
+    _clip_conserves(rng.randn(37))
+    _clip_conserves(rng.randn(8, 16) * 100.0)
+    _clip_conserves(np.zeros(5))           # all-zero block: nothing clips
+    _clip_conserves(np.ones(9))            # uniform block: EVERYTHING rails
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 128), st.floats(1e-3, 1e3), st.integers(0, 999))
+    def test_clip_conservation_swept(n, mag, seed):
+        rng = np.random.RandomState(seed)
+        _clip_conserves(rng.randn(n) * mag)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -e .[test])")
+    def test_clip_conservation_swept():
+        pass
+
+
+def test_plane_clip_report_on_quantized_params():
+    """Every quantized spectral plane contributes >=1 railed code (absmax
+    puts the plane max there), and the census stays in [0, total]."""
+    from repro.serve.params import precompute_serving_params
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    qp = precompute_serving_params(params, cfg,
+                                   QuantPolicy(quant_weights=True))
+    rep = plane_clip_report(qp)
+    assert rep["planes"] > 0
+    assert 0 < rep["clipped"] <= rep["total"]
+    assert rep["clipped"] >= rep["planes"]
+
+
+# ---------------------------------------------------------------------------
+# HealthPlane folds (host side of the device capture)
+# ---------------------------------------------------------------------------
+def test_health_plane_skips_idle_rows():
+    reg = Registry()
+    hp = HealthPlane(reg)
+    hp.on_decode(np.array([[3.0, 1.2, 0.4, 0.0],
+                           [9.9, 9.9, 9.9, 0.0]]),
+                 steps=np.array([2, 0]))
+    h = reg.histogram("health.logit_absmax", phase="decode")
+    assert h.count == 1 and h.max == 3.0
+    assert hp.nonfinite_dispatches == 0
+    hp.on_decode(np.array([[1.0, 1.0, 1.0, 3.0]]), steps=np.array([1]))
+    assert hp.nonfinite_dispatches == 1
+    assert reg.value("health.nonfinite_logits") == 3.0
+
+
+def test_health_plane_prefill_fold():
+    reg = Registry()
+    hp = HealthPlane(reg)
+    hp.on_prefill({"logit": np.array([2.5, 1.0, 0.3, 0.0]),
+                   "act_absmax": np.array([1.0, 4.0, 2.0])})
+    assert reg.histogram("health.logit_absmax", phase="prefill").count == 1
+    assert reg.histogram("health.act_absmax", phase="prefill").count == 3
+    assert hp.stats()["act_absmax_peak"] == 4.0
+    hp.on_prefill({"logit": np.array([np.nan, 1.0, 0.3, 2.0]),
+                   "act_absmax": np.array([])})
+    assert hp.stats()["nonfinite_dispatches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ShadowOracle sampling mechanics (no model needed)
+# ---------------------------------------------------------------------------
+def test_shadow_oracle_gauges_are_lazy():
+    """No agreement/drift gauge may exist before the first replay — a
+    gauge born at 0.0 would breach the SLO agreement rule on every
+    snapshot of a run whose replays simply haven't happened yet."""
+    reg = Registry()
+    ShadowOracle(None, None, policy=QuantPolicy(), registry=reg,
+                 sample=1.0)
+    snap = reg.snapshot()
+    assert "health.greedy_agreement" not in snap["gauges"]
+    assert "health.logit_drift" not in snap["gauges"]
+
+
+def test_shadow_oracle_bounded_queue_drops():
+    reg = Registry()
+    so = ShadowOracle(None, None, policy=QuantPolicy(), registry=reg,
+                      sample=1.0, max_pending=2)
+    for _ in range(5):
+        so.maybe_enqueue(np.array([1, 2, 3]), 4)
+    st = so.stats()
+    assert so.pending == 2
+    assert st["sampled"] == 5 and st["dropped"] == 3
+    assert st["greedy_agreement"] is None            # nothing replayed yet
+
+
+def test_shadow_oracle_sample_zero_never_enqueues():
+    reg = Registry()
+    so = ShadowOracle(None, None, policy=QuantPolicy(), registry=reg,
+                      sample=0.0)
+    assert not so.maybe_enqueue(np.array([1]), 1)
+    assert so.stats()["sampled"] == 0 and so.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO watchdog rule evaluation
+# ---------------------------------------------------------------------------
+def _snap(seq, gauges=None, counters=None, hists=None):
+    return {"type": "snapshot", "seq": seq, "t_s": float(seq),
+            "counters": counters or {}, "gauges": gauges or {},
+            "histograms": hists or {}}
+
+
+def test_slo_gauge_burn_fires_once_and_rearms():
+    """Sustained breach fires ONE alert (latch); clearing re-arms."""
+    wd = SloWatchdog([Rule("drift", metric="health.logit_drift",
+                           kind="gauge", op=">", threshold=10.0,
+                           windows=((2, 1.0),))])
+    assert wd.observe(_snap(0, {"health.logit_drift": 50.0})) == []
+    fired = wd.observe(_snap(1, {"health.logit_drift": 60.0}))
+    assert len(fired) == 1 and fired[0]["rule"] == "drift"
+    # still burning: latched, no duplicate alert
+    assert wd.observe(_snap(2, {"health.logit_drift": 70.0})) == []
+    # clears, then burns again -> second excursion, second alert
+    wd.observe(_snap(3, {"health.logit_drift": 1.0}))
+    wd.observe(_snap(4, {"health.logit_drift": 99.0}))
+    fired = wd.observe(_snap(5, {"health.logit_drift": 99.0}))
+    assert len(fired) == 1
+    assert wd.stats() == {"alerts": 2, "page_alerts": 2,
+                          "by_rule": {"drift": 2}}
+
+
+def test_slo_no_burn_and_flapping_stay_silent():
+    wd = SloWatchdog([Rule("drift", metric="health.logit_drift",
+                           kind="gauge", op=">", threshold=10.0,
+                           windows=((2, 1.0),))])
+    # healthy values never fire
+    for i in range(4):
+        assert wd.observe(_snap(i, {"health.logit_drift": 1.0})) == []
+    # flapping (breach, clear, breach, clear) never fills the 2-window
+    for i, v in enumerate([50.0, 1.0, 50.0, 1.0, 50.0]):
+        assert wd.observe(_snap(10 + i, {"health.logit_drift": v})) == []
+    assert wd.alerts == []
+
+
+def test_slo_absent_series_never_fires():
+    """A run without --shadow-sample has NO agreement gauge: the rule must
+    contribute no observation (instead of reading an implicit 0.0)."""
+    wd = SloWatchdog([Rule("agree", metric="health.greedy_agreement",
+                           kind="gauge", op="<", threshold=0.5,
+                           windows=((1, 1.0),))])
+    for i in range(3):
+        assert wd.observe(_snap(i, {"other.gauge": 0.0})) == []
+    assert wd.alerts == []
+
+
+def test_slo_rate_rule_skips_first_snapshot():
+    wd = SloWatchdog([Rule("anom", metric="engine.anomalies*", kind="rate",
+                           op=">", threshold=0.0, windows=((1, 1.0),))])
+    # first snapshot: no previous counters, no observation even at 5
+    assert wd.observe(_snap(0, counters={"engine.anomalies": 5.0})) == []
+    # no delta -> no fire; delta of 2 -> fire
+    assert wd.observe(_snap(1, counters={"engine.anomalies": 5.0})) == []
+    fired = wd.observe(_snap(2, counters={"engine.anomalies": 7.0}))
+    assert len(fired) == 1 and fired[0]["value"] == 2.0
+
+
+def test_baseline_snapshot_catches_pre_tick_anomaly(tmp_path):
+    """A guard trip BEFORE the first cadence tick must still fire the
+    anomaly-burst rate rule: the engine's birth ``Obs.baseline()``
+    snapshot gives the rule a zero baseline, so the bump lands in a
+    visible inter-snapshot delta (chaos invariant 4 in serve/faults.py)."""
+    wd = SloWatchdog()
+    obs = Obs(emit_path=str(tmp_path / "m.jsonl"), emit_every=5, slo=wd)
+    c = obs.registry.counter("engine.anomalies")
+    obs.baseline()                  # what ContinuousEngine.__init__ does
+    c.inc()                         # anomaly before any tick
+    for _ in range(5):
+        obs.tick()
+    obs.close()
+    assert wd.stats()["by_rule"].get("anomaly-burst", 0) == 1
+    # emitterless Obs: baseline + the final close() evaluation suffice
+    wd2 = SloWatchdog()
+    obs2 = Obs(slo=wd2)
+    obs2.registry.counter("engine.anomalies")
+    obs2.baseline()
+    obs2.registry.counter("engine.anomalies").inc()
+    obs2.close()
+    assert wd2.stats()["by_rule"].get("anomaly-burst", 0) == 1
+
+
+def test_slo_ratio_rule_and_labelled_denominator():
+    wd = SloWatchdog([Rule("clip", metric="quant.clip.kv_clipped*",
+                           kind="ratio", denom="quant.clip.kv_total",
+                           op=">", threshold=0.5, windows=((1, 1.0),),
+                           severity="warn")])
+    c0 = {"quant.clip.kv_clipped": 0.0, "quant.clip.kv_total": 100.0}
+    wd.observe(_snap(0, counters=c0))
+    # 10/100 new values clipped: below threshold
+    c1 = {"quant.clip.kv_clipped": 10.0, "quant.clip.kv_total": 200.0}
+    assert wd.observe(_snap(1, counters=c1)) == []
+    # 90/100 clipped: ratio 0.9 > 0.5 fires at warn severity
+    c2 = {"quant.clip.kv_clipped": 100.0, "quant.clip.kv_total": 300.0}
+    fired = wd.observe(_snap(2, counters=c2))
+    assert len(fired) == 1 and fired[0]["severity"] == "warn"
+    assert fired[0]["value"] == pytest.approx(0.9)
+    # stalled denominator: no observation, no spurious division
+    assert wd.observe(_snap(3, counters=c2)) == []
+
+
+def test_slo_alert_record_validates_and_bumps_registry():
+    reg = Registry()
+    wd = SloWatchdog([Rule("drift", metric="health.logit_drift*",
+                           kind="gauge", op=">", threshold=10.0,
+                           windows=((1, 1.0),))], registry=reg)
+    fired = wd.observe(_snap(0, {"health.logit_drift{replica=r1}": 99.0}))
+    assert len(fired) == 1
+    validate_line(fired[0])                # schema-valid JSONL record
+    # labels of the offending series carry onto the slo.alerts counter
+    assert reg.value("slo.alerts", replica="r1") == 1
+    bad = dict(fired[0])
+    bad["severity"] = "catastrophic"
+    with pytest.raises(ValueError):
+        validate_line(bad)
+    bad = dict(fired[0])
+    del bad["threshold"]
+    with pytest.raises(ValueError):
+        validate_line(bad)
+
+
+def test_default_rules_pass_healthy_snapshot():
+    """The stock ruleset must be quiet on a healthy-looking snapshot —
+    thresholds are generous by design (docs/observability.md)."""
+    wd = SloWatchdog(default_rules())
+    healthy = _snap(
+        0,
+        gauges={"health.logit_drift": 0.06, "health.greedy_agreement": 1.0},
+        counters={"engine.anomalies": 0.0, "tokens": 100.0,
+                  "quant.clip.kv_clipped": 5.0,
+                  "quant.clip.kv_total": 1000.0},
+        hists={"trace.ttft_s": {"p99": 2.0}})
+    for i in range(10):
+        healthy["seq"] = i
+        healthy["counters"]["tokens"] += 50.0
+        healthy["counters"]["quant.clip.kv_total"] += 100.0
+        assert wd.observe(healthy) == []
+    assert wd.alerts == []
+
+
+def test_replica_degrades_on_slo_alert():
+    """fleet/replica.py consumes slo.alerts deltas exactly like NaN-guard
+    anomalies: one fired alert -> DEGRADED."""
+    import collections
+
+    from repro.fleet.replica import DEGRADED, HEALTHY, EngineReplica
+
+    class _Eng:
+        def __init__(self):
+            self.obs = Obs()
+            self.anomalies = 0
+            self.max_seq = None
+
+            class _Sched:
+                queue_depth = 0
+                running = ()
+                queue = collections.deque()
+
+                def drain_doomed(self):
+                    return []
+
+            self.scheduler = _Sched()
+
+        def step(self):
+            return True
+
+        def stats(self):
+            return {}
+
+    eng = _Eng()
+    rep = EngineReplica("r0", eng, step_timeout_s=10.0)
+    rep.step()
+    assert rep.state == HEALTHY
+    wd = SloWatchdog([Rule("drift", metric="health.logit_drift",
+                           kind="gauge", op=">", threshold=10.0,
+                           windows=((1, 1.0),))],
+                     registry=eng.obs.registry)
+    wd.observe(_snap(0, {"health.logit_drift": 99.0}))
+    rep.step()
+    assert rep.state == DEGRADED
+    assert rep.stats()["slo_alerts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: capture + clip telemetry + the acceptance bar
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(n, new=4):
+    rng = np.random.RandomState(0)
+    return [Request(prompt=rng.randint(1, 512, size=rng.randint(4, 10))
+                    .astype(np.int32), max_new_tokens=new, id=i)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def int8_shadow_run(setup):
+    """One int8-KV serve with shadow_sample=1.0 — several tests read it."""
+    cfg, params = setup
+    obs = Obs()
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32,
+                           page_size=4, quant=QuantPolicy(kv_dtype="int8"),
+                           obs=obs, shadow_sample=1.0, seed=0)
+    reqs = _reqs(3)
+    eng.generate(reqs)
+    return eng, obs, reqs
+
+
+def test_capture_populates_health_histograms(int8_shadow_run):
+    eng, obs, _ = int8_shadow_run
+    reg = obs.registry
+    for phase in ("prefill", "decode"):
+        assert reg.histogram("health.logit_absmax", phase=phase).count > 0
+        assert reg.histogram("health.logit_entropy", phase=phase).count > 0
+        assert reg.histogram("health.top1_margin", phase=phase).count > 0
+    assert reg.histogram("health.act_absmax", phase="prefill").count > 0
+    st = eng.stats()
+    assert st["health"]["nonfinite_dispatches"] == 0
+    assert st["health"]["act_absmax_peak"] > 0
+
+
+def test_kv_clip_counters_within_bounds(int8_shadow_run):
+    eng, obs, _ = int8_shadow_run
+    reg = obs.registry
+    clipped = reg.value("quant.clip.kv_clipped")
+    total = reg.value("quant.clip.kv_total")
+    assert total > 0 and 0 <= clipped <= total
+    st = eng.stats()
+    assert st["kv_clip_rate"] == pytest.approx(clipped / total)
+    # scale histograms got fed (page scales are positive by construction)
+    assert reg.histogram("quant.k_scale").count > 0
+    assert reg.histogram("quant.v_scale").count > 0
+
+
+def test_online_agreement_matches_offline_calibrate(int8_shadow_run,
+                                                    setup):
+    """ACCEPTANCE: online shadow greedy agreement on int8-KV tinyllama
+    matches the offline quant/calibrate.py harness within 1 percentage
+    point (same prompts, same teacher-forced definition)."""
+    from repro.quant.calibrate import ParityRunner
+    from repro.serve.params import precompute_serving_params
+    eng, obs, reqs = int8_shadow_run
+    st = eng.stats()["shadow_oracle"]
+    assert st["replays"] == len(reqs) and st["dropped"] == 0
+    online = st["greedy_agreement"]
+    assert online is not None
+    cfg, params = setup
+    policy = QuantPolicy(kv_dtype="int8")
+    runner = ParityRunner(cfg, precompute_serving_params(params, cfg),
+                          precompute_serving_params(params, cfg, policy),
+                          policy=policy, page_size=4)
+    steps = agree = 0.0
+    for r in reqs:
+        rep = runner.run(np.asarray(r.prompt), r.max_new_tokens)
+        steps += rep["steps"]
+        agree += rep["greedy_agreement"] * rep["steps"]
+    offline = agree / steps
+    assert abs(online - offline) <= 0.01, (online, offline)
+    # the gauges exist now (post-replay) and carry the same numbers
+    assert obs.registry.value("health.greedy_agreement") == \
+        pytest.approx(online)
+    assert obs.registry.value("health.logit_drift") == \
+        pytest.approx(st["logit_drift"])
+
+
+def test_corruption_surfaces_in_health_plane(setup):
+    """Under corrupt_p chaos the capture plane surfaces every NaN-guard
+    trip: nonfinite_dispatches >= anomalies, at the SAME fenced dispatch
+    (the guard retires FROM the plane's signal by construction)."""
+    cfg, params = setup
+    obs = Obs()
+    inj = FaultInjector(FaultConfig(seed=0, corrupt_p=1.0))
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32,
+                           page_size=4, precompute=False, obs=obs,
+                           faults=inj)
+    eng.generate(_reqs(2))
+    st = eng.stats()
+    assert st["anomalies"] >= 1                      # guard actually fired
+    assert st["health"]["nonfinite_dispatches"] >= st["anomalies"]
+    assert st["health"]["nonfinite_logits"] > 0
+
+
+def test_disabled_obs_skips_capture_entirely(setup):
+    """obs.enabled=False compiles the pre-health program: stats side-
+    outputs are None, no health plane, no clip counters move."""
+    cfg, params = setup
+    obs = Obs(enabled=False)
+    eng = ContinuousEngine(cfg, params, max_slots=2, max_seq=32,
+                           page_size=4, precompute=False, obs=obs,
+                           quant=QuantPolicy(kv_dtype="int8"))
+    eng.generate(_reqs(2))
+    assert eng._health is None
+    st = eng.stats()
+    assert "health" not in st
+    assert st["kv_clip_rate"] is None
+    assert obs.registry.value("quant.clip.kv_total") == 0
+
+
+def test_shadow_sample_requires_precompute(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params, max_slots=2, max_seq=32, page_size=4,
+                         precompute=False, shadow_sample=0.5)

@@ -93,6 +93,26 @@ def test_histogram_overflow_falls_back_to_buckets():
 def test_histogram_rejects_bad_bounds():
     with pytest.raises(ValueError):
         Histogram(bounds=(2.0, 1.0))
+
+
+def test_histogram_observe_many_matches_loop():
+    # the health plane's bulk fold must be state-identical to a loop of
+    # observe() calls — bucket edges (== bound values) included
+    rng = np.random.RandomState(7)
+    vals = np.concatenate([rng.exponential(0.1, size=23),
+                           np.array(SECONDS_BUCKETS[:4])])
+    keep = 10                              # exercise the retention clamp
+    h_loop, h_bulk = Histogram(keep=keep), Histogram(keep=keep)
+    for v in vals:
+        h_loop.observe(float(v))
+    h_bulk.observe_many(vals[:11])
+    h_bulk.observe_many(vals[11:])
+    h_bulk.observe_many(np.array([]))      # empty fold is a no-op
+    assert h_bulk.counts == h_loop.counts
+    assert h_bulk.count == h_loop.count
+    assert h_bulk.sum == pytest.approx(h_loop.sum)
+    assert (h_bulk.min, h_bulk.max) == (h_loop.min, h_loop.max)
+    assert h_bulk._values == pytest.approx(h_loop._values)
     with pytest.raises(ValueError):
         Histogram(bounds=(1.0, 1.0))
 
@@ -458,3 +478,69 @@ def test_scoped_obs_shares_clock_traces_and_emitter(tmp_path):
     lines = [json.loads(l) for l in open(path)]
     assert {t["replica"] for t in lines if t["type"] == "trace"} == \
         {"r0", "r1"}
+
+
+# ---------------------------------------------------------------------------
+# Gauge high/low-water marks on the Prometheus path (obs/metrics.py)
+# ---------------------------------------------------------------------------
+def test_prometheus_gauge_marks_exact_lines():
+    """max_seen/min_seen export as `_max`/`_min` companion series — a
+    scrape only sees point-in-time gauges, so the low-water mark of
+    pool.free_pages would otherwise be lost.  Exact-line assertions: the
+    format is the contract."""
+    reg = Registry()
+    g = reg.gauge("pool.free_pages", pool="kv")
+    for v in (7.0, 2.0, 5.0):
+        g.set(v)
+    lines = reg.to_prometheus().splitlines()
+    assert 'pool_free_pages{pool="kv"} 5.0' in lines
+    assert "# TYPE pool_free_pages_max gauge" in lines
+    assert 'pool_free_pages_max{pool="kv"} 7.0' in lines
+    assert "# TYPE pool_free_pages_min gauge" in lines
+    assert 'pool_free_pages_min{pool="kv"} 2.0' in lines
+
+
+def test_prometheus_gauge_marks_skip_unset_min():
+    """min_seen is None until the first set (an unset gauge never claims
+    'saw zero headroom'): _max exports (init 0.0), _min must NOT."""
+    reg = Registry()
+    reg.gauge("sched.queue_depth")         # registered, never set
+    lines = reg.to_prometheus().splitlines()
+    assert "sched_queue_depth_max 0.0" in lines
+    assert not any(l.startswith("sched_queue_depth_min") for l in lines)
+    # snapshot carries the same marks the renderer consumed
+    marks = reg.snapshot()["gauge_marks"]["sched.queue_depth"]
+    assert marks == {"max": 0.0, "min": None}
+
+
+# ---------------------------------------------------------------------------
+# Alert records in the emitter schema (obs/emit.py + obs/slo.py)
+# ---------------------------------------------------------------------------
+def test_emitter_appends_watchdog_alerts(tmp_path):
+    """An Emitter with a bound watchdog evaluates every snapshot it
+    writes and appends fired alert lines right behind it; validate_jsonl
+    counts all three record types."""
+    from repro.obs.slo import Rule, SloWatchdog
+    path = str(tmp_path / "alerts.jsonl")
+    reg, traces = Registry(), TraceStore()
+    wd = SloWatchdog([Rule("drift", metric="health.logit_drift",
+                           kind="gauge", op=">", threshold=10.0,
+                           windows=((1, 1.0),))])
+    em = Emitter(reg, traces, path=path, every=1, watchdog=wd)
+    g = reg.gauge("health.logit_drift")
+    g.set(1.0)
+    em.tick()                              # healthy: snapshot only
+    g.set(99.0)
+    em.tick()                              # breach: snapshot + alert
+    em.close()
+    counts = validate_jsonl(path)
+    assert counts["alert"] == 1 and counts["snapshot"] >= 2
+    lines = [json.loads(l) for l in open(path)]
+    kinds = [l["type"] for l in lines]
+    # the alert rides immediately behind the snapshot that fired it
+    i = kinds.index("alert")
+    assert kinds[i - 1] == "snapshot" and lines[i - 1]["seq"] == \
+        lines[i]["seq"]
+    alert = lines[i]
+    validate_line(alert)
+    assert alert["rule"] == "drift" and alert["value"] == 99.0

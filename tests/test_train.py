@@ -130,3 +130,48 @@ def test_schedule_shapes():
     assert float(s[0]) == 0.0
     assert float(s[10]) == pytest.approx(1e-3, rel=1e-5)
     assert float(s[99]) < 3e-4
+
+
+def test_trainer_emits_obs_telemetry(tiny_cfg, tmp_path):
+    """Trainer rides repro.obs: train.* counters/gauges/histogram land in
+    the registry and the JSONL snapshots validate (docs/observability.md
+    'Training telemetry')."""
+    from repro.data.pipeline import SyntheticLM
+    from repro.obs import Obs, validate_jsonl
+    from repro.train.trainer import Trainer
+    path = str(tmp_path / "train.jsonl")
+    obs = Obs(emit_path=path, emit_every=2)
+    tr = Trainer(tiny_cfg, adamw.AdamWConfig(lr=3e-3),
+                 workdir=str(tmp_path / "wd"),
+                 data_fn=SyntheticLM(tiny_cfg, batch=4, seq=32, seed=0),
+                 total_steps=5, ckpt_every=100, log_every=100, obs=obs)
+    tr.run()
+    obs.close()
+    reg = obs.registry
+    assert reg.value("train.steps") == 5
+    assert reg.value("train.tokens") == 5 * 4 * 32
+    assert reg.value("train.skipped_steps") == 0
+    assert reg.histogram("train.step_s").count == 5
+    assert reg.value("train.loss") > 0
+    assert reg.value("train.tokens_per_s") > 0
+    counts = validate_jsonl(path)
+    assert counts["snapshot"] >= 2
+
+
+def test_trainer_disabled_obs_keeps_step_counters(tiny_cfg, tmp_path):
+    """enabled=False: the per-step fence and gauge folds are skipped (the
+    async-dispatch pipeline stays intact) but steps/tokens counters — the
+    stats() substrate — still advance."""
+    from repro.data.pipeline import SyntheticLM
+    from repro.obs import Obs
+    from repro.train.trainer import Trainer
+    obs = Obs(enabled=False)
+    tr = Trainer(tiny_cfg, adamw.AdamWConfig(lr=3e-3),
+                 workdir=str(tmp_path / "wd"),
+                 data_fn=SyntheticLM(tiny_cfg, batch=4, seq=32, seed=0),
+                 total_steps=3, ckpt_every=100, log_every=100, obs=obs)
+    tr.run()
+    reg = obs.registry
+    assert reg.value("train.steps") == 3
+    assert reg.value("train.tokens") == 3 * 4 * 32
+    assert reg.histogram("train.step_s").count == 0
